@@ -1,0 +1,70 @@
+"""Paper Fig. 7 analogue: banding ablation.
+
+Combinations (mirroring the paper's):
+  csr+natural, csr+rcm, csr+bandk (Band-k reduced to plain CSR),
+  csrk+bandk, csrk+rcm_then_bandk.
+Metric: relative performance vs csr+rcm (the paper's zero line), plus
+bandwidth and the TPU-specific consequence — x-window size and padding.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, relative_performance, time_fn
+from repro.configs.spmv_suite import SUITE
+from repro.core.ordering import bandk, bandwidth, rcm
+from repro.core.spmv import prepare
+from repro.core import tuner
+from repro.core.formats import build_csrk, tiles_from_csrk
+from repro.kernels import ref
+
+
+def run(scale: int = 1024, ids=(1, 6, 8, 11, 15)) -> list:
+    rows = []
+    for entry in SUITE:
+        if entry.id not in ids:
+            continue
+        A = entry.build(scale)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(A.n), jnp.float32)
+
+        A_rcm = A.symmetric_permute(rcm(A))
+        A_bk = A.symmetric_permute(bandk(A))
+        A_rcm_bk = A_rcm.symmetric_permute(bandk(A_rcm))
+
+        t_base = time_fn(lambda v: ref.spmv_csr(A_rcm, v), x)   # csr+rcm zero line
+        results = {
+            "csr_natural": time_fn(lambda v: ref.spmv_csr(A, v), x),
+            "csr_rcm": t_base,
+            "csr_bandk": time_fn(lambda v: ref.spmv_csr(A_bk, v), x),
+        }
+        for label, mat in [("csrk_bandk", A_bk), ("csrk_rcm_bandk", A_rcm_bk)]:
+            p = tuner.tune(mat.rdensity, device="tpu_v5e", m=mat.m)
+            tiles = tiles_from_csrk(build_csrk(mat, srs=p.srs, ssrs=p.ssrs, k=3))
+            results[label] = time_fn(lambda v, t=tiles: ref.spmv_csrk_tiles(t, v), x)
+
+        window = {}
+        for label, mat in [("natural", A), ("rcm", A_rcm), ("bandk", A_bk)]:
+            p = tuner.tune(mat.rdensity, device="tpu_v5e", m=mat.m)
+            t = tiles_from_csrk(build_csrk(mat, srs=p.srs, ssrs=p.ssrs, k=3))
+            window[label] = t.window
+
+        rows.append({
+            "matrix": entry.name,
+            "bw_natural": bandwidth(A),
+            "bw_rcm": bandwidth(A_rcm),
+            "bw_bandk": bandwidth(A_bk),
+            "win_natural": window["natural"],
+            "win_rcm": window["rcm"],
+            "win_bandk": window["bandk"],
+            **{
+                f"relperf_{k}": round(relative_performance(t_base, v), 1)
+                for k, v in results.items()
+            },
+        })
+    emit(rows, list(rows[0].keys()) if rows else [])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timing, CSV emission, suite loading."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 5, iters: int = 20) -> float:
+    """Paper Sec. 5.4 protocol: 5 untimed warmups, 20 timed runs, mean.
+
+    Returns seconds per call.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def gflops(nnz: int, seconds: float) -> float:
+    """SpMV does 2·NNZ flops (multiply+add) — the paper's GFlop/s metric."""
+    return 2.0 * nnz / seconds / 1e9
+
+
+def relative_performance(t_base: float, t_ours: float) -> float:
+    """Paper's relative-performance metric (mirrored reciprocal scaling)."""
+    return (t_base - t_ours) / max(t_base, t_ours) * 100.0
+
+
+def emit(rows: List[Dict], header: List[str]) -> None:
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))

@@ -1,0 +1,61 @@
+"""Paper Fig. 11 analogue: constant-time tuning penalty.
+
+For each suite matrix: sweep the paper's (SSRS, SRS) candidate set to find
+the per-matrix optimum (here: the padded-tile-efficiency surrogate measured
+as jnp tile-SpMV wall time), then compare the formula-tuned constant-time
+choice against it with the relative-performance metric.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, relative_performance, time_fn
+from repro.configs.spmv_suite import SUITE
+from repro.core import tuner
+from repro.core.formats import build_csrk, tiles_from_csrk
+from repro.core.ordering import bandk
+from repro.kernels import ref
+
+
+def sweep_optimum(A, x):
+    best = (None, float("inf"))
+    for ssrs in tuner.GPU_SWEEP:
+        for srs in tuner.GPU_SWEEP:
+            if ssrs * srs > max(A.m // 4, 8):
+                continue
+            tiles = tiles_from_csrk(build_csrk(A, srs=srs, ssrs=ssrs, k=3))
+            t = time_fn(
+                lambda v, ti=tiles: ref.spmv_csrk_tiles(ti, v), x,
+                warmup=2, iters=5,
+            )
+            if t < best[1]:
+                best = ((ssrs, srs), t)
+    return best
+
+
+def run(scale: int = 1024, ids=(1, 6, 8, 11, 13, 15)) -> list:
+    rows = []
+    for entry in SUITE:
+        if entry.id not in ids:
+            continue
+        A = entry.build(scale)
+        A = A.symmetric_permute(bandk(A))
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(A.n), jnp.float32)
+        (opt_params, t_opt) = sweep_optimum(A, x)
+        p = tuner.tune(A.rdensity, device="tpu_v5e", m=A.m)
+        tiles = tiles_from_csrk(build_csrk(A, srs=p.srs, ssrs=p.ssrs, k=3))
+        t_model = time_fn(lambda v: ref.spmv_csrk_tiles(tiles, v), x, warmup=2, iters=5)
+        rows.append({
+            "matrix": entry.name,
+            "rdensity": round(A.rdensity, 2),
+            "opt_ssrs": opt_params[0], "opt_srs": opt_params[1],
+            "model_ssrs": p.ssrs, "model_srs": p.srs,
+            "relperf_model_vs_opt": round(relative_performance(t_opt, t_model), 1),
+        })
+    emit(rows, list(rows[0].keys()) if rows else [])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Paper Figs. 5/6/8/9 analogue: SpMV format comparison over the Table-2 suite.
+
+Formats: CSR (segment-sum, the cuSPARSE/MKL-role baseline), CSR-k via the
+Pallas kernel path (tuned, Band-k reordered), CSR-k jnp tile oracle, ELL,
+BCSR, COO.  Reports wall time (jit'd on the host CPU — relative numbers; the
+TPU projection comes from the dry-run roofline), GFlop/s and the paper's
+relative-performance metric vs the CSR baseline.
+
+NOTE on kernel timing: ``interpret=True`` Pallas executes the kernel body in
+Python per grid step, so its wall time is *not* comparable; the CSR-k row we
+time is the jnp tile-view computation (identical arithmetic to the kernel,
+same memory layout), labelled ``csrk_tiles``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, gflops, relative_performance, time_fn
+from repro.configs.spmv_suite import SUITE
+from repro.core.formats import (bcsr_from_csr, build_csrk, csr5_from_csr,
+                                ell_from_csr, tiles_from_csrk)
+from repro.core.spmv import prepare
+from repro.kernels import ref
+
+
+def run(scale: int = 1024, ids=None) -> list:
+    rows = []
+    for entry in SUITE:
+        if ids is not None and entry.id not in ids:
+            continue
+        A = entry.build(scale)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(A.n), jnp.float32)
+
+        t_csr = time_fn(lambda v: ref.spmv_csr(A, v), x)
+        t_coo = time_fn(lambda v, c=A.tocoo(): ref.spmv_coo(c, v), x)
+
+        op = prepare(A, device="tpu_v5e", reorder="bandk")
+        xr = x[jnp.asarray(op.perm)]
+        tiles = op.tiles
+        t_csrk = time_fn(lambda v: ref.spmv_csrk_tiles(tiles, v), xr)
+
+        try:
+            ell = ell_from_csr(A)
+            t_ell = time_fn(lambda v: ref.spmv_ell(ell, v), x)
+            ell_oh = ell.padding_overhead()
+        except MemoryError:
+            t_ell, ell_oh = float("nan"), float("nan")
+
+        bc = bcsr_from_csr(A, br=8, bc=8)
+        xpad = jnp.pad(x, (0, bc.shape[1] - A.n))
+        t_bcsr = time_fn(lambda v: ref.spmv_bcsr(bc, v), xpad)
+
+        c5 = csr5_from_csr(A)
+        t_csr5 = time_fn(lambda v: ref.spmv_csr5_like(c5, v), x)
+
+        rows.append({
+            "id": entry.id,
+            "matrix": entry.name,
+            "n": A.m,
+            "nnz": A.nnz,
+            "rdensity": round(A.rdensity, 2),
+            "csr_gflops": round(gflops(A.nnz, t_csr), 3),
+            "csrk_gflops": round(gflops(A.nnz, t_csrk), 3),
+            "ell_gflops": round(gflops(A.nnz, t_ell), 3),
+            "bcsr_gflops": round(gflops(A.nnz, t_bcsr), 3),
+            "coo_gflops": round(gflops(A.nnz, t_coo), 3),
+            "csr5_gflops": round(gflops(A.nnz, t_csr5), 3),
+            "relperf_vs_csr": round(relative_performance(t_csr, t_csrk), 1),
+            "ell_pad_overhead": round(ell_oh, 2),
+            "csrk_pad_overhead": round(tiles.padding_overhead(), 3),
+            "ssrs": op.params.ssrs,
+            "srs": op.params.srs,
+        })
+    emit(rows, ["id", "matrix", "n", "nnz", "rdensity", "csr_gflops",
+                "csrk_gflops", "csr5_gflops", "ell_gflops", "bcsr_gflops",
+                "coo_gflops", "relperf_vs_csr", "ell_pad_overhead",
+                "csrk_pad_overhead", "ssrs", "srs"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,113 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the JSON artifacts.
+
+  python benchmarks/report.py  # prints markdown tables to stdout
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.1f}"
+
+
+def dryrun_table(path):
+    if not os.path.exists(path):
+        return f"_missing {path}_\n"
+    cells = json.load(open(path))
+    out = [
+        "| arch | shape | mesh | compile s | FLOP/dev | HBM B/dev | coll B/dev | state GiB/dev | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['compile_s']} "
+            f"| {c['flops_per_device']:.2e} | {c['hbm_bytes_per_device']:.2e} "
+            f"| {c['collective_bytes']['total']:.2e} "
+            f"| {fmt_bytes(c['peak_hbm_per_device'])} "
+            f"| {'✓' if c['fits_hbm'] else '✗ OVER'} |"
+        )
+    return "\n".join(out) + "\n"
+
+
+def roofline_table(path, variant):
+    if not os.path.exists(path):
+        return f"_missing {path}_\n"
+    cells = [c for c in json.load(open(path)) if c.get("variant") == variant]
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | roofline frac | useful FLOPs |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        t = c["terms"]
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {c['dominant'].replace('_s','')} "
+            f"| {c['roofline_fraction']:.4f} | {c['useful_flops_ratio']:.2f} |"
+        )
+    return "\n".join(out) + "\n"
+
+
+def before_after_table(path):
+    if not os.path.exists(path):
+        return f"_missing {path}_\n"
+    cells = json.load(open(path))
+    base = {(c["arch"], c["shape"]): c for c in cells if c.get("variant") == "baseline"}
+    opt = {(c["arch"], c["shape"]): c for c in cells if c.get("variant") == "optimized"}
+    out = [
+        "| arch | shape | dominant term | baseline s | optimized s | × | roofline frac b→o |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in base:
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        dom = b["dominant"]
+        bs, os_ = b["terms"][dom], o["terms"][dom]
+        speed = bs / max(os_, 1e-12)
+        out.append(
+            f"| {key[0]} | {key[1]} | {dom.replace('_s','')} | {bs:.4f} | {os_:.4f} "
+            f"| {speed:.1f}× | {b['roofline_fraction']:.4f} → {o['roofline_fraction']:.4f} |"
+        )
+    return "\n".join(out) + "\n"
+
+
+def merged_sweep(root):
+    """Merge the sweep JSON shards into one list (baseline partial + rest +
+    optimized), dropping duplicate (variant, arch, shape) entries."""
+    seen = set()
+    out = []
+    for name in ("roofline_optimized_fix2.json",
+                 "roofline_baseline_rest2.json", "roofline_optimized_fix.json",
+                 "roofline_baseline_partial.json", "roofline_baseline_rest.json",
+                 "roofline_optimized.json", "roofline_sweep.json"):
+        p = os.path.join(root, name)
+        if not os.path.exists(p):
+            continue
+        for c in json.load(open(p)):
+            key = (c.get("variant"), c["arch"], c["shape"])
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(c)
+    return out
+
+
+if __name__ == "__main__":
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    merged = merged_sweep(root)
+    tmp = os.path.join(root, "roofline_merged.json")
+    with open(tmp, "w") as f:
+        json.dump(merged, f, indent=1)
+    print("### Dry-run single-pod (16×16)\n")
+    print(dryrun_table(os.path.join(root, "dryrun_single_pod.json")))
+    print("\n### Dry-run multi-pod (2×16×16)\n")
+    print(dryrun_table(os.path.join(root, "dryrun_multi_pod.json")))
+    print("\n### Roofline (optimized)\n")
+    print(roofline_table(tmp, "optimized"))
+    print("\n### Roofline (baseline)\n")
+    print(roofline_table(tmp, "baseline"))
+    print("\n### Before/after (dominant term of the baseline)\n")
+    print(before_after_table(tmp))

@@ -1,0 +1,49 @@
+"""§Roofline report: reads the dry-run JSON dumps and renders the per-cell
+three-term table (compute / memory / collective seconds, dominant term,
+MODEL_FLOPS ratio) used by EXPERIMENTS.md.
+
+Run after ``python -m repro.launch.dryrun --all --json dryrun_single_pod.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import emit
+
+
+def run(path: str = "roofline_merged.json") -> list:
+    if not os.path.exists(path) and os.path.exists("dryrun_single_pod.json"):
+        path = "dryrun_single_pod.json"
+    if not os.path.exists(path):
+        print(f"# {path} missing — run the dry-run sweep first", file=sys.stderr)
+        return []
+    cells = json.load(open(path))
+    rows = []
+    for c in cells:
+        if c.get("variant") == "baseline":
+            continue
+        t = c["terms"]
+        peak = max(t.values())
+        rows.append({
+            "arch": c["arch"],
+            "shape": c["shape"],
+            "mesh": c["mesh"],
+            "compute_ms": round(t["compute_s"] * 1e3, 3),
+            "memory_ms": round(t["memory_s"] * 1e3, 3),
+            "collective_ms": round(t["collective_s"] * 1e3, 3),
+            "dominant": c["dominant"],
+            "roofline_fraction": round(t["compute_s"] / peak, 4) if peak else 0,
+            "useful_flops_ratio": round(c["useful_flops_ratio"], 3),
+            "hbm_per_dev_gib": round(c.get("peak_hbm_per_device", 0) / 2**30, 2),
+            "fits": c.get("fits_hbm", True),
+        })
+    emit(rows, ["arch", "shape", "mesh", "compute_ms", "memory_ms",
+                "collective_ms", "dominant", "roofline_fraction",
+                "useful_flops_ratio", "hbm_per_dev_gib", "fits"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "dryrun_single_pod.json")

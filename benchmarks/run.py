@@ -1,0 +1,58 @@
+"""Benchmark driver: one section per paper table/figure.
+
+``python -m benchmarks.run [--quick]`` prints ``name,...`` CSV blocks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller matrices")
+    ap.add_argument("--only", default=None,
+                    help="comma list: formats,banding,overhead,constant_tuning,"
+                         "scaling,tuning_model,roofline")
+    args = ap.parse_args()
+    scale = 2048 if args.quick else 1024
+    only = set(args.only.split(",")) if args.only else None
+
+    def section(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    if section("formats"):
+        print("## formats (paper Figs. 5/6/8/9)")
+        from benchmarks import formats
+        formats.run(scale=scale)
+    if section("overhead"):
+        print("\n## overhead (paper Fig. 12)")
+        from benchmarks import overhead
+        overhead.run(scale=scale)
+    if section("banding"):
+        print("\n## banding ablation (paper Fig. 7)")
+        from benchmarks import banding
+        banding.run(scale=max(scale, 1024))
+    if section("constant_tuning"):
+        print("\n## constant-time tuning penalty (paper Fig. 11)")
+        from benchmarks import constant_tuning
+        constant_tuning.run(scale=max(scale, 1024))
+    if section("tuning_model"):
+        print("\n## tuning-model calibration (paper Sec. 4)")
+        from benchmarks import tuning_model
+        tuning_model.run(scale=max(scale, 1024))
+    if section("scaling"):
+        print("\n## scalability (paper Fig. 10)")
+        from benchmarks import scaling
+        scaling.run()
+    if section("roofline"):
+        print("\n## roofline (EXPERIMENTS §Roofline; from dry-run JSON)")
+        from benchmarks import roofline
+        roofline.run()
+    print(f"\n# total {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Fig. 10 analogue: scalability study.
+
+The paper scales OpenMP threads on Rome/Ice Lake; the JAX analogue scales
+device count for the distributed SpMV inside a CG solve.  Runs in a
+subprocess per device count (device count is locked at first jax init).
+Speedups are normalised to 1 device, geometric-mean across the suite subset.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_BODY = r"""
+import os, sys, json, time
+os.environ['XLA_FLAGS'] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import shard_csr, dist_spmv_halo
+from repro.core.ordering import bandk
+from repro.configs.spmv_suite import SUITE
+from repro.launch.mesh import make_host_mesh
+from benchmarks.common import time_fn
+
+D = int(sys.argv[1])
+mesh = make_host_mesh()
+out = {}
+for entry in SUITE:
+    if entry.id not in (6, 8, 11):
+        continue
+    A = entry.build(128)
+    A = A.symmetric_permute(bandk(A))
+    S = shard_csr(A, mesh.shape['data'])
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(A.m), jnp.float32)
+    t = time_fn(lambda v: dist_spmv_halo(S, v, mesh), x, warmup=3, iters=10)
+    out[entry.name] = t
+print(json.dumps(out))
+"""
+
+
+def run(device_counts=(1, 2, 4, 8)) -> list:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src") + ":" + REPO)
+    times = {}
+    for d in device_counts:
+        res = subprocess.run(
+            [sys.executable, "-c", _BODY, str(d)],
+            capture_output=True, text=True, timeout=560, env=env,
+        )
+        assert res.returncode == 0, res.stderr
+        times[d] = json.loads(res.stdout.strip().splitlines()[-1])
+
+    rows = []
+    base = times[device_counts[0]]
+    for d in device_counts:
+        speedups = [base[k] / times[d][k] for k in base]
+        geo = float(np.exp(np.mean(np.log(speedups))))
+        rows.append({"devices": d, "geomean_speedup": round(geo, 3)})
+    from benchmarks.common import emit
+    emit(rows, ["devices", "geomean_speedup"])
+    return rows
+
+
+import numpy as np
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Sec. 4 calibration: sweep (SSRS, SRS), log-regress the optima.
+
+Reproduces the paper's protocol on the TPU surrogate objective: for each
+matrix, find the best (SSRS, SRS) over the paper's candidate set, then fit
+``size = a − b·ln(rdensity)`` independently for SSRS and SRS.  Emits the
+fitted (a, b) pairs — these are the constants baked into core/tuner.TPU_V5E.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.spmv_suite import SUITE
+from repro.core import tuner
+from repro.core.formats import build_csrk, tiles_from_csrk
+from repro.core.ordering import bandk
+from repro.kernels import ref
+
+
+def run(scale: int = 1024) -> dict:
+    rds, opt_ssrs, opt_srs = [], [], []
+    for entry in SUITE:
+        A = entry.build(scale)
+        A = A.symmetric_permute(bandk(A))
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(A.n), jnp.float32)
+        best = (None, float("inf"))
+        for ssrs in tuner.GPU_SWEEP:
+            for srs in tuner.GPU_SWEEP:
+                if ssrs * srs > max(A.m // 4, 8):
+                    continue
+                tiles = tiles_from_csrk(build_csrk(A, srs=srs, ssrs=ssrs, k=3))
+                t = time_fn(lambda v, ti=tiles: ref.spmv_csrk_tiles(ti, v), x,
+                            warmup=1, iters=3)
+                if t < best[1]:
+                    best = ((ssrs, srs), t)
+        rds.append(A.rdensity)
+        opt_ssrs.append(best[0][0])
+        opt_srs.append(best[0][1])
+        print(f"# {entry.name}: rdensity={A.rdensity:.2f} opt={best[0]}")
+
+    a1, b1 = tuner.fit_log_model(np.asarray(rds), np.asarray(opt_ssrs))
+    a2, b2 = tuner.fit_log_model(np.asarray(rds), np.asarray(opt_srs))
+    print(f"SSRS = round({a1:.3f} - {b1:.3f} * ln(rdensity))")
+    print(f"SRS  = round({a2:.3f} - {b2:.3f} * ln(rdensity))")
+    return {"ssrs": (a1, b1), "srs": (a2, b2)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Distributed conjugate-gradient solve — the paper's target workload.
+
+    PYTHONPATH=src python examples/cg_solver.py [--devices 8]
+
+Solves A x = b for a banded PDE matrix with the row-partitioned SpMV
+(halo-exchange variant) on a data-parallel mesh, then checks the solution.
+Run with --devices N to fake an N-device mesh (must be set before jax init,
+so this script re-execs itself with XLA_FLAGS).
+"""
+import argparse
+import os
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--devices", type=int, default=8)
+ap.add_argument("--_ready", action="store_true")
+args = ap.parse_args()
+
+if not args._ready:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+    os.execv(sys.executable, [sys.executable, __file__,
+                              "--devices", str(args.devices), "--_ready"])
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.spmv_suite import grid_laplacian_2d
+from repro.core.distributed import shard_csr, dist_spmv_halo, dist_spmv_allgather
+from repro.core.ordering import bandk
+from repro.core.solvers import cg
+from repro.launch.mesh import make_host_mesh
+
+A = grid_laplacian_2d(48, 48)
+A = A.symmetric_permute(bandk(A))          # Band-k keeps shard halos narrow
+mesh = make_host_mesh()
+S = shard_csr(A, mesh.shape["data"])
+print(f"A: {A.shape}, nnz={A.nnz} | mesh data={mesh.shape['data']} "
+      f"| rows/shard={S.rows_per_shard} halo={S.halo}")
+
+rng = np.random.default_rng(0)
+x_true = rng.standard_normal(A.m).astype(np.float32)
+b = jnp.asarray(np.asarray(A.todense()) @ x_true)
+
+res = cg(lambda v: dist_spmv_halo(S, v, mesh), b, tol=1e-6, maxiter=4000)
+err = float(jnp.abs(res.x - x_true).max())
+print(f"halo-exchange CG: iters={int(res.iters)} residual={float(res.residual):.2e} "
+      f"max err={err:.2e}")
+assert err < 5e-2
+
+res2 = cg(lambda v: dist_spmv_allgather(S, v, mesh), b, tol=1e-6, maxiter=4000)
+print(f"all-gather CG:    iters={int(res2.iters)} residual={float(res2.residual):.2e}")
+print(f"halo traffic per SpMV: 2×{S.halo}×4B/shard vs all-gather {A.m*4}B — "
+      f"{A.m / max(2*S.halo,1):.0f}× less")

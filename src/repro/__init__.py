@@ -1,0 +1,2 @@
+"""repro: CSR-k heterogeneous SpMV (Lane & Booth 2022) as a production JAX framework."""
+__version__ = "1.0.0"

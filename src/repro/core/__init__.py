@@ -1,0 +1,17 @@
+"""CSR-k heterogeneous SpMV — the paper's contribution as a composable module."""
+from repro.core.formats import (  # noqa: F401
+    BCSRMatrix,
+    COOMatrix,
+    CSRMatrix,
+    CSRkMatrix,
+    CSRkTiles,
+    ELLMatrix,
+    bcsr_from_csr,
+    build_csrk,
+    csr_from_coo,
+    ell_from_csr,
+    tiles_from_csrk,
+)
+from repro.core.ordering import bandk, bandwidth, rcm  # noqa: F401
+from repro.core.tuner import TuningParams, tune, fit_log_model  # noqa: F401
+from repro.core.spmv import PreparedSpMV, prepare, spmv  # noqa: F401

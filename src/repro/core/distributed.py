@@ -1,0 +1,148 @@
+"""Distributed SpMV: row-partitioned A across the mesh (shard_map).
+
+The paper targets a single device; this is the framework layer that makes
+CSR-k a *cluster* citizen.  The matrix is Band-k reordered globally, rows are
+partitioned contiguously across the ``data`` axis (so each shard is itself a
+banded CSR-k matrix), and x is either
+
+  * replicated (small n — iterative-solver regime), or
+  * row-sharded with a pre-SpMV all-gather that XLA can overlap with the
+    leading tiles' compute (collective term in the roofline).
+
+Because Band-k bounds each shard's column span, the all-gather can be replaced
+by a *halo exchange* (``halo_spmv``): shard d only needs x over its band
+window, i.e. its own slice plus ≤halo columns from each neighbour — an O(band)
+collective-permute instead of an O(n) all-gather.  This is the beyond-paper
+distributed optimisation evaluated in §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.formats import CSRMatrix
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCSR:
+    """Row-partitioned CSR: per-shard padded arrays stacked on axis 0."""
+
+    row_ptr: jax.Array   # [D, rows_per_shard+1]
+    col_idx: jax.Array   # [D, max_nnz]
+    vals: jax.Array      # [D, max_nnz]
+    shape: Tuple[int, int]
+    rows_per_shard: int
+    halo: int            # max distance a column reaches outside the shard's rows
+
+
+def shard_csr(A: CSRMatrix, num_shards: int) -> ShardedCSR:
+    """Partition rows contiguously into ``num_shards`` padded shards."""
+    m, n = A.shape
+    rp = np.asarray(A.row_ptr)
+    ci = np.asarray(A.col_idx)
+    vl = np.asarray(A.vals)
+    rows_per_shard = -(-m // num_shards)
+    max_nnz = 0
+    for d in range(num_shards):
+        r0, r1 = d * rows_per_shard, min((d + 1) * rows_per_shard, m)
+        max_nnz = max(max_nnz, int(rp[r1] - rp[r0]))
+    max_nnz = max(-(-max_nnz // 128) * 128, 128)
+
+    s_rp = np.zeros((num_shards, rows_per_shard + 1), np.int32)
+    s_ci = np.zeros((num_shards, max_nnz), np.int32)
+    s_vl = np.zeros((num_shards, max_nnz), vl.dtype)
+    halo = 0
+    for d in range(num_shards):
+        r0, r1 = d * rows_per_shard, min((d + 1) * rows_per_shard, m)
+        base = rp[r0]
+        local_rp = rp[r0 : r1 + 1] - base
+        s_rp[d, : r1 - r0 + 1] = local_rp
+        s_rp[d, r1 - r0 + 1 :] = local_rp[-1]
+        k = int(rp[r1] - base)
+        s_ci[d, :k] = ci[base : base + k]
+        s_vl[d, :k] = vl[base : base + k]
+        if k:
+            lo, hi = int(s_ci[d, :k].min()), int(s_ci[d, :k].max())
+            halo = max(halo, r0 - lo, hi - (r1 - 1))
+    return ShardedCSR(
+        jnp.asarray(s_rp), jnp.asarray(s_ci), jnp.asarray(s_vl),
+        (m, n), rows_per_shard, max(halo, 0),
+    )
+
+
+def _local_spmv(row_ptr, col_idx, vals, x_full, col_offset=0):
+    """Segmented SpMV on one padded shard; padding rows produce 0."""
+    rows_per_shard = row_ptr.shape[0] - 1
+    nnz = col_idx.shape[0]
+    lengths = row_ptr[1:] - row_ptr[:-1]
+    rows = jnp.repeat(
+        jnp.arange(rows_per_shard, dtype=jnp.int32), lengths, total_repeat_length=nnz
+    )
+    # padded slots repeat the last row; their vals are 0 so they are inert
+    contrib = vals * jnp.take(x_full, col_idx - col_offset, mode="clip")
+    return jax.ops.segment_sum(contrib, rows, num_segments=rows_per_shard)
+
+
+def dist_spmv_allgather(A: ShardedCSR, x: jax.Array, mesh: Mesh, axis: str = "data"):
+    """y = A x with x row-sharded; all-gather x then local SpMV (baseline)."""
+    D = mesh.shape[axis]
+    xpad = jnp.pad(x, (0, A.rows_per_shard * D - x.shape[0]))
+
+    def body(rp, ci, vl, x_shard):
+        x_full = jax.lax.all_gather(x_shard, axis, tiled=True)
+        return _local_spmv(rp[0], ci[0], vl[0], x_full)
+
+    f = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis)),
+        out_specs=P(axis),
+        check_vma=False,
+    )
+    y = f(A.row_ptr, A.col_idx, A.vals, xpad)
+    return y[: A.shape[0]]
+
+
+def dist_spmv_halo(A: ShardedCSR, x: jax.Array, mesh: Mesh, axis: str = "data"):
+    """Banded halo exchange: neighbours swap ≤halo columns (beyond-paper opt).
+
+    Valid when ``A.halo <= A.rows_per_shard`` (guaranteed by Band-k for the
+    suites we run; checked at trace time).
+    """
+    D = mesh.shape[axis]
+    R = A.rows_per_shard
+    H = -(-max(A.halo, 1) // 128) * 128
+    if H > R:
+        # band too wide for single-neighbour halo — fall back
+        return dist_spmv_allgather(A, x, mesh, axis)
+    xpad = jnp.pad(x, (0, R * D - x.shape[0]))
+
+    def body(rp, ci, vl, x_shard):
+        idx = jax.lax.axis_index(axis)
+        left = jax.lax.ppermute(
+            x_shard[-H:], axis, [(i, (i + 1) % D) for i in range(D)]
+        )
+        right = jax.lax.ppermute(
+            x_shard[:H], axis, [(i, (i - 1) % D) for i in range(D)]
+        )
+        x_win = jnp.concatenate([left, x_shard, right])  # columns [r0-H, r0+R+H)
+        col_offset = idx * R - H
+        return _local_spmv(rp[0], ci[0], vl[0], x_win, col_offset=col_offset)
+
+    f = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis)),
+        out_specs=P(axis),
+        check_vma=False,
+    )
+    y = f(A.row_ptr, A.col_idx, A.vals, xpad)
+    return y[: A.shape[0]]

@@ -1,0 +1,130 @@
+"""Format-dispatching SpMV public API — the paper's contribution as a module.
+
+``prepare(A)`` runs the paper's full setup pipeline:
+  Band-k reorder → constant-time tune (SSRS/SRS from rdensity) → CSR-k build
+  → (TPU path) padded tile view,
+and returns a :class:`PreparedSpMV` whose ``__call__`` is a jit-compatible
+SpMV.  The canonical CSR-k arrays stay CSR-compatible throughout (the
+heterogeneity property); the device decides only the *interpretation*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.ordering as bandk_mod
+import repro.core.tuner as tuner_mod
+from repro.core.formats import (
+    CSRMatrix,
+    CSRkMatrix,
+    CSRkTiles,
+    build_csrk,
+    tiles_from_csrk,
+)
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedSpMV:
+    """A tuned, reordered, device-ready SpMV operator y = A x.
+
+    ``perm`` maps new index → old index (A was symmetrically permuted), so for
+    callers living in the original index space:
+        y_old[perm] == P A P^T (x_old[perm])  ⇒  use ``apply_original``.
+    """
+
+    csrk: CSRkMatrix
+    tiles: Optional[CSRkTiles]
+    perm: np.ndarray
+    params: tuner_mod.TuningParams
+    device: str
+    gather_mode: str = "onehot"
+    interpret: bool = True
+
+    @property
+    def csr(self) -> CSRMatrix:
+        return self.csrk.csr
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """SpMV in the *reordered* index space."""
+        if self.tiles is not None:
+            return kops.spmv_csrk(
+                self.tiles, x, gather_mode=self.gather_mode, interpret=self.interpret
+            )
+        # CPU path (CSR-2): hierarchy collapses to the segmented CSR kernel;
+        # super-rows drive the parallel partitioning, which XLA:CPU derives
+        # from the segment structure.
+        return kref.spmv_csr(self.csr, x)
+
+    def apply_original(self, x_old: jax.Array) -> jax.Array:
+        """SpMV for vectors indexed in the matrix's original ordering."""
+        perm = jnp.asarray(self.perm)
+        y_new = self(x_old[perm])
+        return jnp.zeros_like(y_new).at[perm].set(y_new)
+
+    # -- introspection used by benchmarks ------------------------------------
+    def overhead_fraction(self) -> float:
+        return self.csrk.overhead_fraction()
+
+    def padding_overhead(self) -> float:
+        return self.tiles.padding_overhead() if self.tiles is not None else 0.0
+
+
+def prepare(
+    A: CSRMatrix,
+    device: str = "tpu_v5e",
+    *,
+    reorder: str = "bandk",           # "bandk" | "rcm" | "natural"
+    params: tuner_mod.TuningParams | None = None,
+    gather_mode: str = "onehot",
+    interpret: bool = True,
+    adaptive: bool = False,
+) -> PreparedSpMV:
+    """Full CSR-k setup pipeline (paper Sec. 3–4).
+
+    ``adaptive=True`` replaces the paper's rdensity-only formula with the
+    variance-aware bytes-model tuner (beyond-paper, EXPERIMENTS §Perf).
+    """
+    if reorder == "bandk":
+        perm = bandk_mod.bandk(A, k=3)
+    elif reorder == "rcm":
+        perm = bandk_mod.rcm(A)
+    elif reorder == "natural":
+        perm = np.arange(A.m)
+    else:
+        raise ValueError(f"unknown reorder {reorder!r}")
+    Ar = A.symmetric_permute(perm) if reorder != "natural" else A
+
+    if params is None:
+        if adaptive and device == "tpu_v5e":
+            params = tuner_mod.tune_tpu_adaptive(
+                np.asarray(Ar.row_ptr), np.asarray(Ar.col_idx), Ar.rdensity, Ar.m
+            )
+        else:
+            params = tuner_mod.tune(Ar.rdensity, device=device, m=Ar.m)
+
+    if params.k >= 3 and device not in ("cpu", "rome", "icelake"):
+        csrk = build_csrk(Ar, srs=params.srs, ssrs=params.ssrs, k=3)
+        tiles = tiles_from_csrk(csrk)
+    else:
+        csrk = build_csrk(Ar, srs=params.srs, k=2)
+        tiles = None
+    return PreparedSpMV(
+        csrk=csrk,
+        tiles=tiles,
+        perm=perm,
+        params=params,
+        device=device,
+        gather_mode=gather_mode,
+        interpret=interpret,
+    )
+
+
+def spmv(A: CSRMatrix, x: jax.Array) -> jax.Array:
+    """One-shot CSR SpMV (no setup) — plain-CSR baseline."""
+    return kref.spmv_csr(A, x)

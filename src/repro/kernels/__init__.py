@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: SpMV.
+
+spmv_csrk.py — CSR-k kernel (grid=SSR, banded x-window, one-hot MXU gather)
+spmv_ell.py  — ELL baseline kernel
+ops.py       — jit'd wrappers;  ref.py — pure-jnp oracles
+"""

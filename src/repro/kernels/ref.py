@@ -1,0 +1,134 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the correctness references the Pallas kernels are swept against
+(tests/test_kernels.py) and the "plain CSR" baseline the paper compares
+formats to (its cuSPARSE/MKL CSR role).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import (
+    BCSRMatrix,
+    COOMatrix,
+    CSRMatrix,
+    CSRkMatrix,
+    CSRkTiles,
+    ELLMatrix,
+)
+
+
+def spmv_dense(dense: jax.Array, x: jax.Array) -> jax.Array:
+    return dense @ x
+
+
+def spmv_coo(mat: COOMatrix, x: jax.Array) -> jax.Array:
+    """COO SpMV: scatter-add (the paper's 'needs atomics' baseline)."""
+    contrib = mat.vals * x[mat.col_idx]
+    return jnp.zeros((mat.shape[0],), contrib.dtype).at[mat.row_idx].add(contrib)
+
+
+def spmv_csr(mat: CSRMatrix, x: jax.Array) -> jax.Array:
+    """Row-segmented CSR SpMV — the canonical oracle."""
+    rows = jnp.repeat(
+        jnp.arange(mat.m, dtype=jnp.int32),
+        mat.row_lengths(),
+        total_repeat_length=mat.nnz,
+    )
+    contrib = mat.vals * x[mat.col_idx]
+    return jax.ops.segment_sum(contrib, rows, num_segments=mat.m)
+
+
+def spmv_csrk_loops(mat: CSRkMatrix, x: jax.Array) -> jax.Array:
+    """Direct transcription of the paper's Listing 1 (CSR-3 CPU kernel).
+
+    Nested SSR→SR→row→nnz loops via fori_loop; slow under jit but a faithful
+    structural oracle for the hierarchy semantics.
+    """
+    row_ptr, col_idx, vals = mat.row_ptr, mat.col_idx, mat.vals
+    sr_ptr, ssr_ptr = mat.sr_ptr, mat.ssr_ptr
+
+    def row_body(k, y):
+        r_start, r_end = row_ptr[k], row_ptr[k + 1]
+
+        def nnz_body(l, temp):
+            return temp + vals[l] * x[col_idx[l]]
+
+        temp = jax.lax.fori_loop(r_start, r_end, nnz_body, jnp.zeros((), vals.dtype))
+        return y.at[k].set(temp)
+
+    def sr_body(j, y):
+        return jax.lax.fori_loop(sr_ptr[j], sr_ptr[j + 1], row_body, y)
+
+    def ssr_body(i, y):
+        return jax.lax.fori_loop(ssr_ptr[i], ssr_ptr[i + 1], sr_body, y)
+
+    y0 = jnp.zeros((mat.m,), vals.dtype)
+    return jax.lax.fori_loop(0, mat.num_ssr, ssr_body, y0)
+
+
+def spmv_ell(mat: ELLMatrix, x: jax.Array) -> jax.Array:
+    """ELL SpMV: dense gather + row sum (paper Sec. 2.3)."""
+    return jnp.sum(mat.vals * x[mat.col_idx], axis=1)
+
+
+def spmv_bcsr(mat: BCSRMatrix, x: jax.Array) -> jax.Array:
+    """BCSR SpMV: per-block dense matvec + segmented add."""
+    bR, bC = mat.block_shape
+    mb = int(mat.block_row_ptr.shape[0]) - 1
+    nblocks = int(mat.blocks.shape[0])
+    lengths = mat.block_row_ptr[1:] - mat.block_row_ptr[:-1]
+    brow = jnp.repeat(
+        jnp.arange(mb, dtype=jnp.int32), lengths, total_repeat_length=nblocks
+    )
+    xb = x.reshape(-1, bC)[mat.block_col_idx]            # [nblocks, bC]
+    contrib = jnp.einsum("brc,bc->br", mat.blocks, xb)    # [nblocks, bR]
+    yb = jax.ops.segment_sum(contrib, brow, num_segments=mb)
+    return yb.reshape(-1)[: mat.shape[0]]
+
+
+def spmv_csrk_tiles(tiles: CSRkTiles, x: jax.Array) -> jax.Array:
+    """Oracle for the padded-tile view consumed by the Pallas kernel.
+
+    Computes, per tile t: y[t·R : (t+1)·R] = Σ_s vals[t,s] · x[win+lc[t,s]]
+    segment-summed by local_row, plus the COO remainder.
+    """
+    T, S = tiles.vals.shape
+    R, W = tiles.rows_per_tile, tiles.window
+    n = tiles.shape[1]
+    # absolute columns, clamped (padding slots have val 0 so clamping is inert)
+    abs_col = jnp.minimum(
+        tiles.win_block[:, None] * W + tiles.local_col, n - 1
+    )
+    contrib = tiles.vals * x[abs_col]                      # [T, S]
+    seg = tiles.local_row + (jnp.arange(T, dtype=jnp.int32) * R)[:, None]
+    y = jax.ops.segment_sum(contrib.reshape(-1), seg.reshape(-1), num_segments=T * R)
+    y = y[: tiles.shape[0]]
+    if tiles.remainder_nnz:
+        y = y.at[tiles.rem_row].add(tiles.rem_val * x[tiles.rem_col])
+    return y
+
+
+def spmm_csr(mat: CSRMatrix, X: jax.Array) -> jax.Array:
+    """SpMM oracle (multi-vector SpMV), used by the CG block solver."""
+    rows = jnp.repeat(
+        jnp.arange(mat.m, dtype=jnp.int32),
+        mat.row_lengths(),
+        total_repeat_length=mat.nnz,
+    )
+    contrib = mat.vals[:, None] * X[mat.col_idx]
+    return jax.ops.segment_sum(contrib, rows, num_segments=mat.m)
+
+
+def spmv_csr5_like(mat, x: jax.Array) -> jax.Array:
+    """CSR5-like SpMV: rows reconstructed from the bit-flag prefix sum
+    (the format's defining trick), then a segmented sum."""
+    compact = jnp.clip(
+        jnp.cumsum(mat.row_flag.astype(jnp.int32)) - 1,
+        0, mat.nonempty_rows.shape[0] - 1,
+    )
+    rows = mat.nonempty_rows[compact]
+    contrib = mat.vals * x[mat.col_idx]
+    # padded slots carry val 0 → inert
+    return jax.ops.segment_sum(contrib, rows, num_segments=mat.shape[0])

@@ -1,0 +1,402 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh).
+
+For each cell this script:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. builds abstract inputs (ShapeDtypeStruct, zero allocation),
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()``,
+  4. prints ``memory_analysis()`` (bytes/device → fits-HBM verdict) and
+     ``cost_analysis()`` (FLOPs/bytes for the §Roofline terms),
+  5. parses the HLO for collective operand bytes (all-gather / all-reduce /
+     reduce-scatter / all-to-all / collective-permute).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.registry import all_archs, get_config, supported_shapes
+from repro.launch import steps as STEPS
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from repro.optim.adamw import AdamWConfig
+
+# v5e hardware model (roofline constants; see EXPERIMENTS.md §Roofline)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per-chip effective, 1 axis)
+HBM_BYTES = 16 * 1024**3   # v5e HBM per chip
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def jnp_dtype_size(dtype) -> int:
+    return int(np.dtype(dtype).itemsize)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Parse 'bf16[8,128,256]{...}' → byte count (tuples handled upstream)."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    if dims == "":
+        return b
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return b * n
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in the HLO, by kind.
+
+    Collective cost scales with *output* shard bytes per participant; summing
+    the op result shapes (which HLO spells on the lhs of '=') gives the bytes
+    that actually cross links under SPMD once divided by device count — we
+    report raw totals and normalise in the roofline.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_part, opname = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-") or opname.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if shape_part.startswith("("):
+            total = sum(
+                _shape_bytes(t) for t in shape_part.strip("()").split(",") if "[" in t
+            )
+            # tuple elements are split on ',' inside dims too; re-parse robustly
+            total = sum(
+                _shape_bytes(t.group(0))
+                for t in re.finditer(r"[a-z0-9]+\[[0-9,]*\]", shape_part)
+            )
+        else:
+            total = _shape_bytes(shape_part)
+        out[kind] += total
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def dryrun_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    mesh=None,
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+
+    args, shardings = STEPS.input_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        step_fn = STEPS.make_train_step(cfg, opt_cfg, mesh)
+        ordered = ["params", "opt_state", "tokens", "labels"]
+    elif shape.kind == "prefill":
+        step_fn = STEPS.make_prefill_step(cfg, mesh)
+        ordered = ["params", "tokens"]
+    else:
+        step_fn = STEPS.make_decode_step(cfg, mesh)
+        ordered = ["params", "cache", "tokens", "cache_index"]
+    if "extra" in args:
+        ordered.append("extra")
+
+    in_shardings = tuple(shardings[k] for k in ordered)
+    arg_vals = tuple(args[k] for k in ordered)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(step_fn, in_shardings=in_shardings)
+        lowered = jitted.lower(*arg_vals)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    flops = float(cost.get("flops", 0.0))
+    # bytes accessed: prefer explicit key; fall back to summing operand spaces
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+
+    # Analytic per-device state bytes: the CPU backend's temp_size aggregates
+    # buffer live ranges across the whole process, so HBM-fit is judged from
+    # the *sharded argument sizes* (params + optimizer state + cache + batch),
+    # the quantity that must persist in HBM between steps on a real TPU.
+    def shard_count(sharding) -> int:
+        spec = getattr(sharding, "spec", None)
+        if spec is None:
+            return 1
+        n = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                n *= mesh.shape[a]
+        return n
+
+    state_bytes = 0
+    param_bytes = 0
+    for k in ordered:
+        leaves = jax.tree_util.tree_leaves(args[k])
+        shards = jax.tree_util.tree_leaves(
+            shardings[k], is_leaf=lambda s: hasattr(s, "spec")
+        )
+        for leaf, sh in zip(leaves, shards):
+            nbytes = int(np.prod(leaf.shape)) * jnp_dtype_size(leaf.dtype)
+            sharded = nbytes // max(shard_count(sh), 1)
+            state_bytes += sharded
+            if k == "params":
+                param_bytes += sharded
+    # training holds a transient f32 gradient tree sharded like params
+    if shape.kind == "train":
+        state_bytes += param_bytes * 2
+    per_dev_hbm = state_bytes
+
+    compute_s = flops / (PEAK_FLOPS)            # per-device: HLO is per-shard
+    memory_s = hbm_bytes / HBM_BW
+    coll_s = coll["total"] / ICI_BW
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+
+    model_flops = 6 * cfg.active_param_count() * shape.global_batch * (
+        shape.seq_len if shape.kind in ("train", "prefill") else 1
+    )
+    if shape.kind == "train":
+        pass  # 6·N·D already counts fwd+bwd
+    else:
+        model_flops //= 3  # forward only: 2·N·D
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collective_bytes": coll,
+        "peak_hbm_per_device": int(per_dev_hbm),
+        "fits_hbm": bool(per_dev_hbm <= HBM_BYTES),
+        "terms": terms,
+        "dominant": dominant,
+        "model_flops_global": float(model_flops),
+        "useful_flops_ratio": float(model_flops / max(flops * n_dev, 1.0)),
+    }
+
+
+def _analysis_cfg(cfg, units: int, shape):
+    """Analysis variant: unrolled layers (scan bodies are counted once by
+    HLO cost analysis, so the real config under-reports by ~L) and single-
+    chunk attention/linear-attention (inner scans → trip-1 whiles).  Depth is
+    ``units`` repeat-units (hybrid period / dense-MoE pair / single layer)."""
+    import dataclasses
+    unit = cfg.attn_period if cfg.attn_period > 0 else (
+        cfg.moe_every if (cfg.is_moe and cfg.moe_every > 1) else 1
+    )
+    kw = dict(
+        scan_layers=False,
+        layers=unit * units,
+        analysis_unroll=True,          # inner scans fully unrolled
+        attention_chunk=4096,          # moderate chunks keep compile sane
+        la_chunk=128,                  # (flops ∝ T·C for the intra term —
+                                       # documented in EXPERIMENTS §Roofline)
+    )
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = units
+    return dataclasses.replace(cfg, **kw), cfg.layers // unit
+
+
+def _cell_costs(cfg, shape, mesh) -> Dict[str, float]:
+    """(flops, hbm bytes, collective bytes) per device for one lowering."""
+    args, shardings = STEPS.input_specs(cfg, shape, mesh)
+    if shape.kind == "train":
+        step_fn = STEPS.make_train_step(cfg, AdamWConfig(), mesh)
+        ordered = ["params", "opt_state", "tokens", "labels"]
+    elif shape.kind == "prefill":
+        step_fn = STEPS.make_prefill_step(cfg, mesh)
+        ordered = ["params", "tokens"]
+    else:
+        step_fn = STEPS.make_decode_step(cfg, mesh)
+        ordered = ["params", "cache", "tokens", "cache_index"]
+    if "extra" in args:
+        ordered.append("extra")
+    with mesh:
+        compiled = (
+            jax.jit(step_fn, in_shardings=tuple(shardings[k] for k in ordered))
+            .lower(*[args[k] for k in ordered])
+            .compile()
+        )
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    n_while = hlo.count(" while(")
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(collective_bytes(hlo)["total"]),
+        "whiles": n_while,
+    }
+
+
+def roofline_cell(arch: str, shape_name: str, mesh=None, *,
+                  cfg_override=None) -> Dict[str, Any]:
+    """§Roofline terms via two-point depth extrapolation (exact for uniform
+    stacks): total(L) = c(1·unit) + (units−1) · [c(2·unit) − c(1·unit)]."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh if mesh is not None else make_production_mesh()
+    cfg1, units = _analysis_cfg(cfg, 1, shape)
+    cfg2, _ = _analysis_cfg(cfg, 2, shape)
+    c1 = _cell_costs(cfg1, shape, mesh)
+    c2 = _cell_costs(cfg2, shape, mesh)
+    total = {
+        # per-unit delta clamped at 0: tiny decode cells can see c2 < c1 from
+        # layout/fusion noise, and a negative marginal layer cost is unphysical
+        k: c1[k] + (units - 1) * max(c2[k] - c1[k], 0.0)
+        for k in ("flops", "bytes", "coll")
+    }
+    terms = {
+        "compute_s": total["flops"] / PEAK_FLOPS,
+        "memory_s": total["bytes"] / HBM_BW,
+        "collective_s": total["coll"] / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind in ("train", "prefill") else 1
+    )
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * cfg.active_param_count() * tokens
+    # attention quadratic term (causal ≈ ½ of S²), decode: S per new token
+    n_attn = sum(1 for i in range(cfg.layers) if cfg.layer_kind(i) == "attn")
+    hd, H = cfg.resolved_head_dim, cfg.num_heads
+    if shape.kind in ("train", "prefill"):
+        attn = 2 * shape.global_batch * shape.seq_len**2 * H * hd * n_attn
+    else:
+        attn = 4 * shape.global_batch * shape.seq_len * H * hd * n_attn
+    model_flops += (mult // 2) * attn
+    peak = max(terms.values())
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "units": units,
+        "terms": terms,
+        "dominant": dominant,
+        "flops_per_device": total["flops"],
+        "hbm_bytes_per_device": total["bytes"],
+        "collective_bytes_per_device": total["coll"],
+        "model_flops_global": float(model_flops),
+        "useful_flops_ratio": float(model_flops / max(total["flops"] * n_dev, 1.0)),
+        "roofline_fraction": terms["compute_s"] / peak if peak else 0.0,
+        "residual_whiles": max(c1["whiles"], c2["whiles"]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in all_archs():
+            for shape in supported_shapes(get_config(arch)):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    failures = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch, shape in cells:
+            tag = f"{arch} × {shape} × {'2x16x16' if multi_pod else '16x16'}"
+            try:
+                r = dryrun_cell(arch, shape, multi_pod=multi_pod, mesh=mesh)
+                results.append(r)
+                print(
+                    f"[OK] {tag}: compile {r['compile_s']}s, "
+                    f"{r['flops_per_device']:.3e} FLOP/dev, "
+                    f"{r['hbm_bytes_per_device']:.3e} B/dev, "
+                    f"coll {r['collective_bytes']['total']:.3e} B, "
+                    f"peak HBM {r['peak_hbm_per_device']/2**30:.1f} GiB "
+                    f"({'fits' if r['fits_hbm'] else 'OVER'}), "
+                    f"dominant={r['dominant']}"
+                )
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+            sys.stdout.flush()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    print(f"\n{len(results)} cells compiled, {failures} failures")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

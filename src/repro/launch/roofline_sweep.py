@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Roofline sweep: extrapolated three-term analysis for every runnable cell,
+in both baseline (optimization flags off — the paper-faithful/naive SPMD
+system) and optimized (flags on) variants.
+
+  python -m repro.launch.roofline_sweep --out roofline.json [--variant both]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import traceback
+
+from repro.configs.registry import all_archs, get_config, supported_shapes
+from repro.launch.dryrun import roofline_cell
+from repro.launch.mesh import make_production_mesh
+
+BASELINE_FLAGS = dict(
+    opt_act_sharding=False,
+    opt_decode_fastpath=False,
+    opt_moe_slot_loop=False,
+    vocab_pad_multiple=1,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="roofline.json")
+    ap.add_argument("--variant", default="both", choices=["baseline", "optimized", "both"])
+    ap.add_argument("--cells", default=None, help="arch:shape,arch:shape,...")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    if args.cells:
+        cells = [tuple(c.split(":")) for c in args.cells.split(",")]
+    else:
+        cells = [
+            (arch, shape)
+            for arch in all_archs()
+            for shape in supported_shapes(get_config(arch))
+        ]
+    variants = (
+        ["baseline", "optimized"] if args.variant == "both" else [args.variant]
+    )
+    results = []
+    for variant in variants:
+        for arch, shape in cells:
+            cfg = get_config(arch)
+            if variant == "baseline":
+                cfg = dataclasses.replace(cfg, **BASELINE_FLAGS)
+            try:
+                r = roofline_cell(arch, shape, mesh=mesh, cfg_override=cfg)
+                r["variant"] = variant
+                results.append(r)
+                t = r["terms"]
+                print(
+                    f"[{variant:9s}] {arch} × {shape}: "
+                    f"comp {t['compute_s']:.4f}s mem {t['memory_s']:.4f}s "
+                    f"coll {t['collective_s']:.4f}s dom={r['dominant']} "
+                    f"rf={r['roofline_fraction']:.4f} useful={r['useful_flops_ratio']:.2f}"
+                )
+            except Exception as e:
+                print(f"[{variant:9s}] {arch} × {shape}: FAIL {type(e).__name__}: {e}")
+                traceback.print_exc()
+            sys.stdout.flush()
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

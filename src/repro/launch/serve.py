@@ -1,0 +1,72 @@
+"""Serving launcher: batched prefill + decode loop with a KV cache.
+
+Host-scale example:
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch import steps as STEPS
+from repro.models import transformer as TF
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.is_encdec or cfg.frontend is not None:
+        raise SystemExit(f"{args.arch}: use examples for frontend archs")
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(0)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+
+    with mesh:
+        params = TF.init_params(key, cfg)
+        prompts = jax.random.randint(key, (B, P), 0, cfg.vocab)
+        cache = TF.init_cache(cfg, B, max_len)
+        decode_step = jax.jit(STEPS.make_decode_step(cfg, mesh), donate_argnums=(1,))
+
+        # prefill through the cache path (writes K/V for the prompt)
+        t0 = time.time()
+        logits, cache, _ = TF.forward(
+            params, prompts, cfg, cache=cache, cache_index=jnp.zeros((), jnp.int32)
+        )
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        t_prefill = time.time() - t0
+
+        out = [tok]
+        t0 = time.time()
+        for i in range(G - 1):
+            logits, cache = decode_step(
+                params, cache, tok, jnp.asarray(P + i, jnp.int32)
+            )
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    print(f"prefill {B}x{P}: {t_prefill*1e3:.1f} ms")
+    print(f"decode {G-1} steps: {t_decode*1e3:.1f} ms "
+          f"({(G-1)*B/max(t_decode,1e-9):.1f} tok/s)")
+    print("sample tokens:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

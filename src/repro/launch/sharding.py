@@ -1,0 +1,184 @@
+"""Parameter/activation sharding rules: path-name → PartitionSpec.
+
+Strategy (DESIGN §6): FSDP over ``data`` (params ZeRO-sharded on the d_model
+axis), TP over ``model`` (heads / ffn / vocab / experts), DP across ``pod``
+(params replicated, gradients all-reduced inter-pod).  Optimizer state
+inherits the param spec (ZeRO), so the rules here are the single source of
+truth for the whole training state.
+
+``sanitize_spec`` drops any mesh axis that does not divide the dim — e.g.
+granite's vocab 49155 is not divisible by 16, so its embedding falls back to
+replicated-on-model automatically instead of failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# rules keyed by parameter leaf name; specs are for the *trailing* dims and
+# leading dims (layer stacking, expert dim handled separately) get None.
+_COL = ("data", "model")      # [D, out] — FSDP on in, TP on out
+_ROW = ("model", "data")      # [in, D] — TP on in, FSDP on out
+_NAME_RULES = {
+    # embeddings [V, D]: vocab over model (TP logits), d_model over data
+    "embedding": ("model", "data"),
+    "unembedding": ("model", "data"),
+    # attention / generic projections
+    "wq": _COL, "wk": _COL, "wv": _COL, "wo": _ROW,
+    # rwkv time/channel mixing
+    "wr": _COL, "wg": _COL, "ck": _COL, "cr": _COL, "cv": _ROW,
+    "w_lora_a": _COL, "w_lora_b": (None, None),
+    # mlp / mamba projections
+    "w_in": _COL, "w_gate": _COL, "w_out": _ROW,
+    "w_B": _COL, "w_C": _COL, "w_dt": _COL,
+    # router stays replicated (EP shard_map expects it everywhere)
+    "router": (None, None),
+    # 1-D params
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    "scale": (None,), "bias": (None,),
+    "w0": (None,), "u": (None, None), "gn_scale": (None,),
+    "mix": (None, None), "cmix": (None, None),
+    "dt_bias": (None,), "A_log": (None,), "D_skip": (None,),
+}
+# MoE expert tensors are 3-D [E, in, out]: expert dim over model (EP).
+_MOE_RULES = {
+    "w_in": ("model", "data", None),
+    "w_gate": ("model", "data", None),
+    "w_out": ("model", None, "data"),
+}
+
+
+def sanitize_spec(shape: Tuple[int, ...], spec: Tuple, mesh: Mesh) -> P:
+    """Drop axes that don't divide the dim; drop axes absent from the mesh."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if size > 1 and dim % size == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_spec(path: Tuple, leaf: Any, mesh: Mesh, fsdp_over_pod: bool = False) -> P:
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    name = names[-1]
+    in_moe = "moe" in names
+    rule = None
+    if in_moe and name in _MOE_RULES:
+        rule = _MOE_RULES[name]
+    elif name in _NAME_RULES:
+        rule = _NAME_RULES[name]
+    if rule is None:
+        return P()
+    if fsdp_over_pod and "pod" in mesh.axis_names:
+        # ZeRO escalation: the FSDP axis grows to pod×data (params/optimizer
+        # sharded across pods; gradients reduce-scattered the same way).
+        rule = tuple(
+            ("pod", "data") if ax == "data" else ax for ax in rule
+        )
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    pad = ndim - len(rule)
+    if pad < 0:
+        rule = rule[-ndim:] if ndim > 0 else ()
+        pad = 0
+    full = (None,) * pad + tuple(rule)
+    shape = leaf.shape if hasattr(leaf, "shape") else np.shape(leaf)
+    return sanitize_spec(shape, full, mesh)
+
+
+def params_shardings(params: Any, mesh: Mesh, fsdp_over_pod: bool = False) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, mesh, fsdp_over_pod)
+        ),
+        params,
+    )
+
+
+def params_pspecs(params: Any, mesh: Mesh, fsdp_over_pod: bool = False) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh, fsdp_over_pod), params
+    )
+
+
+def state_bytes_per_device(params: Any, shardings: Any, mesh: Mesh,
+                           opt_multiplier: float = 5.0) -> int:
+    """Persistent training-state bytes/device: params + f32 mu/nu (+grad),
+    under the given shardings. ``opt_multiplier``≈(2·4+2)/2 for bf16 params."""
+    total = 0
+    leaves = jax.tree_util.tree_leaves(params)
+    shards = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda s: hasattr(s, "spec")
+    )
+    for leaf, sh in zip(leaves, shards):
+        n = 1
+        for entry in sh.spec:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                n *= mesh.shape[a]
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize // n
+    return int(total * opt_multiplier)
+
+
+# ---------------------------------------------------------------------------
+# cache sharding (decode)
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(path: Tuple, leaf: Any, mesh: Mesh, batch: int) -> P:
+    """Decode-cache sharding.
+
+    Attention K/V [L, B, S, kv, hd]: batch over DP axes when divisible;
+    the ``model`` axis goes on kv-heads when divisible, else on S (sequence
+    parallelism — the long_500k path where B=1 also moves DP onto S).
+    Recurrent states (S/x_prev) shard batch only (they are O(1) per seq).
+    """
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    ndim = len(shape)
+    spec = [None] * ndim
+    if name in ("k", "v") and ndim >= 4:
+        b_dim, s_dim, kv_dim = ndim - 4, ndim - 3, ndim - 2
+        if batch % dp_size == 0:
+            spec[b_dim] = dp if len(dp) > 1 else dp[0]
+            if shape[kv_dim] % mesh.shape["model"] == 0:
+                spec[kv_dim] = "model"
+            elif shape[s_dim] % mesh.shape["model"] == 0:
+                spec[s_dim] = "model"
+        else:
+            # tiny batch (long_500k): sequence-shard over everything
+            all_axes = tuple(a for a in mesh.axis_names)
+            size = int(np.prod([mesh.shape[a] for a in all_axes]))
+            if shape[s_dim] % size == 0:
+                spec[s_dim] = all_axes
+    else:
+        # recurrent state [L, B, H, K, V] or x_prev [L, B, D]
+        b_dim = 1 if ndim >= 3 else 0
+        if ndim >= 2 and shape[b_dim] % dp_size == 0 and shape[b_dim] >= dp_size:
+            spec[b_dim] = dp if len(dp) > 1 else dp[0]
+    return sanitize_spec(shape, tuple(spec), mesh)
+
+
+def cache_shardings(cache: Any, mesh: Mesh, batch: int) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_spec(path, leaf, mesh, batch)),
+        cache,
+    )
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))

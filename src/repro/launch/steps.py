@@ -1,0 +1,281 @@
+"""Jit-able train/serve step functions + abstract input specs per shape cell.
+
+Everything here is built to be ``.lower()``-ed with ShapeDtypeStructs (no
+allocation) for the multi-pod dry-run, and executed for real at smoke scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.optim import adamw
+from repro.launch import sharding as SH
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    mesh: Optional[Mesh] = None,
+    *,
+    aux_weight: float = 0.01,
+    microbatches: int = 1,
+    compression=None,
+):
+    """Returns train_step(params, opt_state, tokens, labels, [extra]) →
+    (params, opt_state, metrics). ``microbatches`` > 1 accumulates gradients
+    sequentially (memory ↓, same math).
+
+    ``compression`` (a CompressionConfig) switches the step to the CSR top-k
+    gradient path with error feedback: the signature becomes
+    train_step(params, opt_state, comp_state, tokens, labels, [extra]) →
+    (params, opt_state, comp_state, metrics) — the paper's format carrying
+    the DP traffic (DESIGN §4)."""
+
+    def loss_fn(params, tokens, labels, extra=None):
+        if cfg.is_encdec:
+            enc_out = ED.encode(params, extra, cfg)
+            logits, _ = ED.decode(params, tokens, enc_out, cfg)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            inp: jax.Array = tokens
+            if cfg.frontend == "vit" and extra is not None:
+                from repro.models.frontends import vlm_prepend
+                inp = vlm_prepend(params, extra, tokens, cfg)
+                labels = jnp.pad(
+                    labels, ((0, 0), (extra.shape[1], 0)), constant_values=0
+                )
+            logits, _, aux = TF.forward(params, inp, cfg, mesh=mesh)
+        loss = cross_entropy(logits, labels)
+        return loss + aux_weight * aux, (loss, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, tokens, labels, extra=None):
+        if microbatches <= 1:
+            (total, (loss, aux)), grads = grad_fn(params, tokens, labels, extra)
+        else:
+            B = tokens.shape[0]
+            mb = B // microbatches
+            def body(carry, i):
+                g_acc, l_acc, a_acc = carry
+                tb = jax.lax.dynamic_slice_in_dim(tokens, i * mb, mb, 0)
+                lb = jax.lax.dynamic_slice_in_dim(labels, i * mb, mb, 0)
+                eb = (
+                    jax.lax.dynamic_slice_in_dim(extra, i * mb, mb, 0)
+                    if extra is not None else None
+                )
+                (_, (l, a)), g = grad_fn(params, tb, lb, eb)
+                g_acc = jax.tree.map(lambda x, y: x + y, g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                body, (zeros, 0.0, 0.0), jnp.arange(microbatches)
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss, aux = loss / microbatches, aux / microbatches
+        new_params, new_opt, metrics = adamw.apply(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, moe_aux=aux)
+        return new_params, new_opt, metrics
+
+    if compression is None:
+        return train_step
+
+    from repro.optim import compress as COMP
+
+    def train_step_compressed(params, opt_state, comp_state, tokens, labels, extra=None):
+        (total, (loss, aux)), grads = grad_fn(params, tokens, labels, extra)
+        grads, comp_state, cmetrics = COMP.compress_grads(
+            compression, grads, comp_state
+        )
+        new_params, new_opt, metrics = adamw.apply(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, moe_aux=aux, **cmetrics)
+        return new_params, new_opt, comp_state, metrics
+
+    return train_step_compressed
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    def prefill_step(params, tokens, extra=None):
+        if cfg.is_encdec:
+            enc_out = ED.encode(params, extra, cfg)
+            logits, _ = ED.decode(params, tokens, enc_out, cfg)
+            return logits
+        inp: jax.Array = tokens
+        if cfg.frontend == "vit" and extra is not None:
+            from repro.models.frontends import vlm_prepend
+            inp = vlm_prepend(params, extra, tokens, cfg)
+        logits, _, _ = TF.forward(params, inp, cfg, mesh=mesh)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    """One new token against a KV cache / recurrent state of seq_len."""
+
+    def decode_step(params, cache, tokens, cache_index, extra=None):
+        if cfg.is_encdec:
+            logits, new_cache = ED.decode(
+                params, tokens, extra, cfg, cache=cache, cache_index=cache_index
+            )
+            return logits, new_cache
+        logits, new_cache, _ = TF.forward(
+            params, tokens, cfg, cache=cache, cache_index=cache_index, mesh=mesh
+        )
+        return logits, new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    init = ED.init_params if cfg.is_encdec else TF.init_params
+    return jax.eval_shape(functools.partial(init, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(adamw.init, abstract_params(cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    init = ED.init_cache if cfg.is_encdec else TF.init_cache
+    return jax.eval_shape(functools.partial(init, cfg, batch, max_len))
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (args, in_shardings) for the step function of this shape cell.
+
+    For training: {params, opt_state, tokens, labels, [extra]}.
+    For prefill:  {params, tokens, [extra]}.
+    For decode:   {params, cache, tokens, cache_index, [extra]}.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dp = SH.batch_sharding(mesh)
+    repl = NamedSharding(mesh, P())
+    tok_dtype = jnp.int32
+
+    params = abstract_params(cfg)
+    p_shard = SH.params_shardings(params, mesh)
+    if shape.kind == "train" and "pod" in mesh.axis_names:
+        # auto-ZeRO escalation: if params+optimizer would blow HBM under
+        # intra-pod FSDP, shard the FSDP axis across pods too (trades an
+        # inter-pod all-gather for fitting — logged in EXPERIMENTS §Dry-run)
+        est = SH.state_bytes_per_device(params, p_shard, mesh)
+        if est > 14 * 1024**3:
+            p_shard = SH.params_shardings(params, mesh, fsdp_over_pod=True)
+
+    extra = None
+    extra_shard = None
+    if cfg.is_encdec or cfg.frontend == "vit":
+        seq = cfg.frontend_seq
+        extra = jax.ShapeDtypeStruct((B, seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        extra_shard = SH.batch_sharding(mesh)
+        if B % np.prod([mesh.shape[a] for a in (("pod", "data") if "pod" in mesh.axis_names else ("data",))]) != 0:
+            extra_shard = repl
+
+    b_ok = True
+    dp_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    if B % dp_size != 0:
+        dp = repl
+        b_ok = False
+
+    if shape.kind == "train":
+        opt = abstract_opt_state(cfg)
+        # mu/nu mirror param specs (ZeRO); step is replicated
+        opt_shard = adamw.AdamWState(
+            step=repl,
+            mu=jax.tree.map(lambda s: s, p_shard),
+            nu=jax.tree.map(lambda s: s, p_shard),
+        )
+        args = {
+            "params": params,
+            "opt_state": opt,
+            "tokens": jax.ShapeDtypeStruct((B, S), tok_dtype),
+            "labels": jax.ShapeDtypeStruct((B, S), tok_dtype),
+        }
+        shardings = {
+            "params": p_shard,
+            "opt_state": opt_shard,
+            "tokens": dp,
+            "labels": dp,
+        }
+        if extra is not None:
+            args["extra"] = extra
+            shardings["extra"] = extra_shard
+        return args, shardings
+
+    if shape.kind == "prefill":
+        args = {
+            "params": params,
+            "tokens": jax.ShapeDtypeStruct((B, S), tok_dtype),
+        }
+        shardings = {"params": p_shard, "tokens": dp}
+        if extra is not None:
+            args["extra"] = extra
+            shardings["extra"] = extra_shard
+        return args, shardings
+
+    # decode / long_decode: one token per sequence, cache of length S
+    cache = abstract_cache(cfg, B, S)
+    c_shard = SH.cache_shardings(cache, mesh, B)
+    args = {
+        "params": params,
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((B, 1), tok_dtype),
+        "cache_index": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    shardings = {
+        "params": p_shard,
+        "cache": c_shard,
+        "tokens": dp,
+        "cache_index": repl,
+    }
+    if cfg.is_encdec:
+        # decode attends over encoder output
+        args["extra"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+        shardings["extra"] = SH.batch_sharding(mesh) if b_ok else repl
+    return args, shardings

@@ -1,0 +1,28 @@
+"""Modality frontend stubs (per assignment: ``input_specs()`` provides
+precomputed patch/frame embeddings; the transformer backbone is the real
+model).
+
+``vlm``  (internvl2-76b): InternViT patch embeddings [B, n_patches, D] are
+prepended to the text embeddings.
+``audio`` (seamless-m4t): frame embeddings [B, n_frames, D] feed the encoder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def vlm_prepend(params, patch_embeds: jax.Array, tokens: jax.Array, cfg: ModelConfig):
+    """Concatenate projected patch embeddings before token embeddings."""
+    text = params["embedding"][tokens]
+    patches = patch_embeds.astype(text.dtype)
+    return jnp.concatenate([patches, text], axis=1)
+
+
+def frontend_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct for the stub frontend output."""
+    if cfg.frontend is None:
+        return None
+    return jax.ShapeDtypeStruct((batch, cfg.frontend_seq, cfg.d_model), dtype)

@@ -1,0 +1,314 @@
+"""Shared neural layers: norms, RoPE, GQA attention (flash-style), MLPs.
+
+Functional style: every layer is ``init_*(key, cfg) -> params`` plus a pure
+``apply`` function.  Params are plain dicts so sharding rules can be attached
+by path name (launch/sharding.py) and checkpoints stay framework-free.
+
+Attention is implemented as a chunked online-softmax ("flash") scan over KV
+blocks — no [T, T] score materialisation — which is what makes prefill_32k
+lowerable at production shapes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+DEFAULT_QUERY_CHUNK = 1024
+DEFAULT_KV_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * params["scale"]
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * params["scale"] + params["bias"]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., T, H, Dh]; positions: [..., T]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                          # [Dh/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., T, 1, Dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(
+    key,
+    d_model: int,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    qkv_bias: bool = False,
+    dtype=jnp.float32,
+) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(k1, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(k2, d_model, kv_heads * head_dim, dtype),
+        "wv": dense_init(k3, d_model, kv_heads * head_dim, dtype),
+        "wo": dense_init(k4, num_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((kv_heads * head_dim,), dtype)
+    return p
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """[B, T, Hkv, Dh] → [B, T, Hkv*groups, Dh] (GQA broadcast)."""
+    if groups == 1:
+        return k
+    b, t, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, h, groups, d)).reshape(
+        b, t, h * groups, d
+    )
+
+
+def flash_attention(
+    q: jax.Array,            # [B, Tq, H, Dh]
+    k: jax.Array,            # [B, Tk, H, Dh]
+    v: jax.Array,            # [B, Tk, H, Dh]
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+    kv_chunk: int = DEFAULT_KV_CHUNK,
+    kv_valid_len: Optional[jax.Array] = None,
+    unroll: bool = False,
+) -> jax.Array:
+    """Chunked online-softmax attention (no [Tq, Tk] materialisation).
+
+    ``unroll=True`` fully unrolls the kv-chunk scan — used by the roofline
+    analysis path, where HLO cost analysis counts while-loop bodies once.
+
+    ``q_offset`` is the absolute position of q[0] (for causal masking of
+    decode steps). ``kv_valid_len`` masks cache padding during decode.
+    """
+    B, Tq, H, Dh = q.shape
+    Tk = k.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+    q32 = q.astype(jnp.float32) * scale
+    kv_chunk = min(kv_chunk, Tk)
+    num_chunks = -(-Tk // kv_chunk)
+    Tk_pad = num_chunks * kv_chunk
+    if Tk_pad != Tk:
+        k = jnp.pad(k, ((0, 0), (0, Tk_pad - Tk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tk_pad - Tk), (0, 0), (0, 0)))
+    kc = k.reshape(B, num_chunks, kv_chunk, H, Dh).astype(jnp.float32)
+    vc = v.reshape(B, num_chunks, kv_chunk, H, Dh).astype(jnp.float32)
+
+    q_pos = q_offset + jnp.arange(Tq)
+    valid_len = jnp.asarray(Tk if kv_valid_len is None else kv_valid_len)
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kb, vb, chunk_idx = blk
+        kv_pos = chunk_idx * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, kb)          # [B, H, Tq, C]
+        mask = kv_pos[None, :] < valid_len
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, None, :, :], s, -jnp.inf)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked blocks
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, :, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, Tq), -jnp.inf)
+    l0 = jnp.zeros((B, H, Tq))
+    acc0 = jnp.zeros((B, H, Tq, Dh))
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kc_t, vc_t, jnp.arange(num_chunks)),
+        unroll=num_chunks if unroll else 1,
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)          # [B, Tq, H, Dh]
+
+
+def _decode_attention(
+    q: jax.Array,          # [B, 1, H, Dh]
+    k: jax.Array,          # [B, S, Hkv, Dh]
+    v: jax.Array,          # [B, S, Hkv, Dh]
+    groups: int,
+    valid_len: jax.Array,
+) -> jax.Array:
+    """Single-token attention over the full cache (no chunk scan)."""
+    B, S, Hkv, Dh = k.shape
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, Hkv, groups, Dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(S)[None, None, None, :] < valid_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, Hkv * groups, Dh).astype(q.dtype)
+
+
+def attention_apply(
+    params: Params,
+    x: jax.Array,                       # [B, T, D]
+    *,
+    num_heads: int,
+    kv_heads: int,
+    head_dim: int,
+    positions: jax.Array,
+    rope_theta: float = 10000.0,
+    causal: bool = True,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    kv_chunk: int = DEFAULT_KV_CHUNK,
+    decode_fastpath: bool = True,
+    scan_unroll: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """GQA attention. With ``cache`` given, runs a decode/prefill cache update."""
+    B, T, D = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, T, num_heads, head_dim)
+    k = k.reshape(B, T, kv_heads, head_dim)
+    v = v.reshape(B, T, kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # write new kv at cache_index, attend over the whole (masked) cache
+        idx = cache_index if cache_index is not None else jnp.zeros((), jnp.int32)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k_full, v_full = ck, cv
+        valid = idx + T
+        groups = num_heads // kv_heads
+        if T == 1 and decode_fastpath:
+            # decode fast path: one fused masked-softmax einsum over the whole
+            # cache. No kv-chunk scan → the SPMD partitioner keeps the cache's
+            # sequence sharding and lowers the softmax reduction to a single
+            # small all-reduce (EXPERIMENTS §Perf H2), instead of per-chunk
+            # dynamic-slice resharding (the "involuntary full remat" path).
+            out = _decode_attention(q, k_full, v_full, groups, valid)
+        else:
+            out = flash_attention(
+                q,
+                _repeat_kv(k_full, groups),
+                _repeat_kv(v_full, groups),
+                causal=causal,
+                q_offset=idx,
+                kv_chunk=kv_chunk,
+                kv_valid_len=valid,
+                unroll=scan_unroll,
+            )
+    else:
+        groups = num_heads // kv_heads
+        out = flash_attention(
+            q, _repeat_kv(k, groups), _repeat_kv(v, groups),
+            causal=causal, kv_chunk=kv_chunk, unroll=scan_unroll,
+        )
+    out = out.reshape(B, T, num_heads * head_dim) @ params["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(k1, d_model, d_ff, dtype),
+        "w_out": dense_init(k3, d_ff, d_model, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k2, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params: Params, x: jax.Array) -> jax.Array:
+    h = x @ params["w_in"]
+    if "w_gate" in params:
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def unembed(x: jax.Array, embedding: jax.Array) -> jax.Array:
+    """Tied unembedding: [B, T, D] × [V, D]^T → logits."""
+    return x @ embedding.T

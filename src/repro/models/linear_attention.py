@@ -1,0 +1,124 @@
+"""Chunked decayed linear attention — the shared recurrence engine for
+RWKV-6 (vector data-dependent decay, arXiv:2404.05892) and the selective-SSM
+half of Jamba (scalar-per-head decay, SSD formulation).
+
+Recurrence (per head, state S ∈ R^{K×V}):
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ            w_t ∈ (0,1)^K (vector)
+    o_t = r_tᵀ (S_{t-1} + u ⊙ k_t v_tᵀ)           (u: RWKV bonus, optional)
+
+Training uses the chunked matmul form (log-space decay ratios, f32
+accumulation): O(T·C) memory instead of O(T·K·V), MXU-shaped matmuls —
+this is the TPU-native form of the recurrence (no per-step scan).
+Decode keeps the O(1) recurrent state.
+
+Numerical contract: the factored form computes exp(+W) · exp(−W) pairs, so
+the *cumulative* log-decay span inside one chunk must stay below ~85 nats
+(f32 exp overflow).  Callers clamp per-step log decay to ≥ LOG_W_MIN and use
+chunk ≤ 32, giving span ≤ 80; the engine additionally clips exponent args at
+±85 as a belt-and-braces (a no-op when the contract holds, and affecting only
+contributions that are ≈0 anyway when it does not).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_W_MIN = -2.5   # per-step decay floor (see numerical contract above)
+_EXP_CAP = 85.0
+
+
+def _safe_exp(x: jax.Array) -> jax.Array:
+    return jnp.exp(jnp.clip(x, -_EXP_CAP, _EXP_CAP))
+
+
+def chunked_linear_attention(
+    r: jax.Array,            # [B, H, T, K]   receptance / query
+    k: jax.Array,            # [B, H, T, K]
+    v: jax.Array,            # [B, H, T, V]
+    log_w: jax.Array,        # [B, H, T, K]   log decay, <= 0
+    *,
+    u: Optional[jax.Array] = None,   # [H, K] RWKV "bonus" for current token
+    chunk: int = 32,
+    initial_state: Optional[jax.Array] = None,  # [B, H, K, V]
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output [B, H, T, V], final_state [B, H, K, V])."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, "pad T to a multiple of chunk"
+    NC = T // chunk
+
+    f32 = jnp.float32
+    rc = r.reshape(B, H, NC, chunk, K).astype(f32)
+    kc = k.reshape(B, H, NC, chunk, K).astype(f32)
+    vc = v.reshape(B, H, NC, chunk, V).astype(f32)
+    lw = log_w.reshape(B, H, NC, chunk, K).astype(f32)
+
+    # cumulative log decay within a chunk, exclusive-of-self for the r side:
+    # W_t = sum_{s<=t} log w_s   (inclusive), used so that
+    #   decay(s→t) = exp(W_t − W_s)  multiplies k_s v_s into o_t for s < t.
+    Wc = jnp.cumsum(lw, axis=-2)                             # [B,H,NC,C,K] inclusive
+
+    # intra-chunk: contribution of s to t (s<t) decays by
+    #   prod_{u=s+1}^{t-1} w_u = exp(W_{t-1} − W_s)
+    # (matches linear_attention_decode: kv_s enters the state undecayed).
+    r_dec = rc * _safe_exp(Wc - lw)     # r_t ⊙ exp(W_{t-1})  (exclusive cumsum)
+    k_dec = kc * _safe_exp(-Wc)         # k_s ⊙ exp(−W_s)     (inclusive)
+    A = jnp.einsum("bhntk,bhnsk->bhnts", r_dec, k_dec)
+    idx = jnp.arange(chunk)
+    strict = idx[:, None] > idx[None, :]
+    A = jnp.where(strict[None, None, None], A, 0.0)
+    o_intra = jnp.einsum("bhnts,bhnsv->bhntv", A, vc)
+    if u is not None:
+        diag = jnp.einsum("bhntk,hk,bhntk->bhnt", rc, u.astype(f32), kc)
+        o_intra = o_intra + diag[..., None] * vc
+
+    # cross-chunk scan: state carried between chunks
+    W_end = Wc[..., -1, :]                                   # [B,H,NC,K] total chunk decay
+    r_in = rc * _safe_exp(Wc - lw)                           # decay from chunk start
+    k_out = kc * _safe_exp(W_end[..., None, :] - Wc)         # decay to chunk end
+
+    def scan_fn(S, inp):
+        r_i, k_o, v_i, w_e = inp                             # per-chunk slices
+        o_cross = jnp.einsum("btk,bkv->btv", r_i, S)
+        S_new = S * _safe_exp(w_e)[..., None] + jnp.einsum("btk,btv->bkv", k_o, v_i)
+        return S_new, o_cross
+
+    S0 = (
+        jnp.zeros((B * H, K, V), f32)
+        if initial_state is None
+        else initial_state.reshape(B * H, K, V).astype(f32)
+    )
+    flat = lambda a: jnp.moveaxis(a, 2, 0).reshape(NC, B * H, *a.shape[3:])
+    S_fin, o_cross = jax.lax.scan(
+        scan_fn, S0, (flat(r_in), flat(k_out), flat(vc), flat(W_end)),
+        unroll=NC if unroll else 1,
+    )
+    o_cross = jnp.moveaxis(o_cross.reshape(NC, B, H, chunk, V), 0, 2)
+    out = (o_intra + o_cross).reshape(B, H, T, V)
+    return out.astype(r.dtype), S_fin.reshape(B, H, K, V)
+
+
+def linear_attention_decode(
+    r: jax.Array,            # [B, H, K]
+    k: jax.Array,            # [B, H, K]
+    v: jax.Array,            # [B, H, V]
+    log_w: jax.Array,        # [B, H, K]
+    state: jax.Array,        # [B, H, K, V]
+    *,
+    u: Optional[jax.Array] = None,   # [H, K]
+) -> Tuple[jax.Array, jax.Array]:
+    """One-token decode: O(1) state update (the long_500k path)."""
+    f32 = jnp.float32
+    r32, k32, v32 = r.astype(f32), k.astype(f32), v.astype(f32)
+    kv = k32[..., :, None] * v32[..., None, :]               # [B,H,K,V]
+    if u is not None:
+        att_state = state + u.astype(f32)[None, :, :, None] * kv
+    else:
+        att_state = state
+    out = jnp.einsum("bhk,bhkv->bhv", r32, att_state)
+    new_state = state * jnp.exp(log_w.astype(f32))[..., None] + kv
+    return out.astype(r.dtype), new_state

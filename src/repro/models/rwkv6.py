@@ -1,0 +1,183 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): data-dependent decay linear
+attention (time mixing) + squared-ReLU channel mixing, with token shift.
+
+Faithful structural elements kept: token-shift interpolation with learned
+mix vectors, LoRA-style data-dependent decay ``w = exp(−exp(w0 + lora(x)))``,
+per-head bonus ``u``, GroupNorm on attention output.  The recurrence runs on
+the shared chunked engine (linear_attention.py); decode carries the O(1)
+[B, H, K, V] state — which is why rwkv6 is a ``long_500k`` architecture.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+from repro.models.linear_attention import (
+    LOG_W_MIN,
+    chunked_linear_attention,
+    linear_attention_decode,
+)
+
+Params = Dict[str, Any]
+
+
+def rwkv6_block_init(
+    key, d_model: int, num_heads: int, d_ff: int, lora_rank: int = 64, dtype=jnp.float32
+) -> Params:
+    head_dim = d_model // num_heads
+    ks = jax.random.split(key, 12)
+    p: Params = {
+        "ln1": rmsnorm_init(d_model, dtype),
+        "ln2": rmsnorm_init(d_model, dtype),
+        # token-shift mix coefficients (r, k, v, w, g)
+        "mix": (jax.random.uniform(ks[0], (5, d_model)) * 0.5 + 0.25).astype(dtype),
+        "wr": dense_init(ks[1], d_model, d_model, dtype),
+        "wk": dense_init(ks[2], d_model, d_model, dtype),
+        "wv": dense_init(ks[3], d_model, d_model, dtype),
+        "wg": dense_init(ks[4], d_model, d_model, dtype),
+        "wo": dense_init(ks[5], d_model, d_model, dtype),
+        # data-dependent decay: w = exp(-exp(w0 + B(A x)))
+        "w0": (jnp.zeros((d_model,)) - 0.6).astype(dtype),
+        "w_lora_a": dense_init(ks[6], d_model, lora_rank, dtype),
+        "w_lora_b": (jnp.zeros((lora_rank, d_model))).astype(dtype),
+        "u": (jax.random.normal(ks[7], (num_heads, head_dim)) * 0.3).astype(dtype),
+        "gn_scale": jnp.ones((d_model,), dtype),
+        # channel mixing
+        "ck": dense_init(ks[8], d_model, d_ff, dtype),
+        "cv": dense_init(ks[9], d_ff, d_model, dtype),
+        "cr": dense_init(ks[10], d_model, d_model, dtype),
+        "cmix": (jax.random.uniform(ks[11], (2, d_model)) * 0.5 + 0.25).astype(dtype),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """x_{t-1} (zero/``prev`` at t=0)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev)
+    return shifted
+
+
+def _time_mix_inputs(p: Params, xn: jax.Array, shifted: jax.Array):
+    mix = p["mix"]
+    lerp = lambda i: xn + (shifted - xn) * mix[i]
+    xr, xk, xv, xw, xg = (lerp(i) for i in range(5))
+    r = xr @ p["wr"]
+    k = xk @ p["wk"]
+    v = xv @ p["wv"]
+    g = jax.nn.silu(xg @ p["wg"])
+    log_w = -jnp.exp(
+        (p["w0"] + (xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    )
+    # keep decay sane: clamp to [-8, -1e-4]
+    log_w = jnp.clip(log_w, LOG_W_MIN, -1e-4)
+    return r, k, v, g, log_w
+
+
+def _heads(x: jax.Array, num_heads: int) -> jax.Array:
+    B, T, D = x.shape
+    return x.reshape(B, T, num_heads, D // num_heads).transpose(0, 2, 1, 3)
+
+
+def _unheads(x: jax.Array) -> jax.Array:
+    B, H, T, Dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, T, H * Dh)
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, num_heads: int, eps=1e-5):
+    B, T, D = x.shape
+    xh = x.reshape(B, T, num_heads, D // num_heads).astype(jnp.float32)
+    mu = xh.mean(axis=-1, keepdims=True)
+    var = xh.var(axis=-1, keepdims=True)
+    return (((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(B, T, D) * scale).astype(x.dtype)
+
+
+def rwkv6_block_apply(
+    p: Params,
+    x: jax.Array,                 # [B, T, D]
+    *,
+    num_heads: int,
+    chunk: int = 128,
+    state: Optional[Dict[str, jax.Array]] = None,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full-sequence (training/prefill) pass. ``state`` carries (S, x_prev)."""
+    B, T, D = x.shape
+    xn = rmsnorm(p["ln1"], x)
+    prev_x = state["x_prev_att"] if state is not None else None
+    shifted = _token_shift(xn, prev_x)
+    r, k, v, g, log_w = _time_mix_inputs(p, xn, shifted)
+    S0 = state["S"] if state is not None else None
+    o, S = chunked_linear_attention(
+        _heads(r, num_heads), _heads(k, num_heads), _heads(v, num_heads),
+        _heads(log_w, num_heads), u=p["u"], chunk=chunk, initial_state=S0,
+        unroll=unroll,
+    )
+    o = _group_norm(_unheads(o), p["gn_scale"], num_heads) * g
+    x = x + o @ p["wo"]
+
+    # channel mixing
+    xn2 = rmsnorm(p["ln2"], x)
+    prev_x2 = state["x_prev_ffn"] if state is not None else None
+    shifted2 = _token_shift(xn2, prev_x2)
+    xk = xn2 + (shifted2 - xn2) * p["cmix"][0]
+    xr = xn2 + (shifted2 - xn2) * p["cmix"][1]
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    x = x + jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+
+    new_state = None
+    if state is not None:
+        new_state = {
+            "S": S,
+            "x_prev_att": xn[:, -1],
+            "x_prev_ffn": xn2[:, -1],
+        }
+    return x, new_state
+
+
+def rwkv6_block_decode(
+    p: Params,
+    x: jax.Array,                 # [B, 1, D]
+    state: Dict[str, jax.Array],
+    *,
+    num_heads: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode with O(1) state (long_500k serve path)."""
+    B, _, D = x.shape
+    H = num_heads
+    Dh = D // H
+    xn = rmsnorm(p["ln1"], x)[:, 0]                            # [B, D]
+    shifted = state["x_prev_att"]
+    r, k, v, g, log_w = _time_mix_inputs(
+        p, xn[:, None, :], shifted[:, None, :]
+    )
+    hb = lambda a: a[:, 0].reshape(B, H, Dh)
+    o, S = linear_attention_decode(
+        hb(r), hb(k), hb(v), hb(log_w), state["S"], u=p["u"]
+    )
+    o = o.reshape(B, 1, D)
+    o = _group_norm(o, p["gn_scale"], H) * g
+    x = x + o @ p["wo"]
+
+    xn2 = rmsnorm(p["ln2"], x)[:, 0]
+    shifted2 = state["x_prev_ffn"]
+    xk = xn2 + (shifted2 - xn2) * p["cmix"][0]
+    xr = xn2 + (shifted2 - xn2) * p["cmix"][1]
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    x = x + (jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"]))[:, None, :]
+
+    return x, {"S": S, "x_prev_att": xn, "x_prev_ffn": xn2}
+
+
+def rwkv6_init_state(batch: int, d_model: int, num_heads: int, dtype=jnp.float32):
+    head_dim = d_model // num_heads
+    return {
+        "S": jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+        "x_prev_att": jnp.zeros((batch, d_model), dtype),
+        "x_prev_ffn": jnp.zeros((batch, d_model), dtype),
+    }

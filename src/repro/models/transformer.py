@@ -1,0 +1,458 @@
+"""Decoder-only LM covering dense/GQA, MoE, RWKV-6 and hybrid (Jamba) archs.
+
+Uniform layers are stacked and executed with ``jax.lax.scan`` so the HLO (and
+compile time) stays O(1) in depth — essential for the 61-layer/384-expert
+dry-runs.  Hybrid archs scan over *periods* (Jamba: 8-layer period = 7 mamba +
+1 attention) with the period body unrolled.
+
+Cache layout for decode: one pytree per layer-kind, stacked on axis 0, scanned
+in lockstep with the layer params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str, is_moe: bool) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {}
+    if kind == "rwkv":
+        return R.rwkv6_block_init(k1, cfg.d_model, cfg.num_heads, cfg.d_ff, dtype=dtype)
+    if kind == "mamba":
+        p["mixer"] = M.mamba_block_init(
+            k1, cfg.d_model, expand=cfg.mamba_expand, d_state=cfg.mamba_d_state, dtype=dtype
+        )
+    else:
+        p["ln1"] = L.rmsnorm_init(cfg.d_model, dtype)
+        p["attn"] = L.attention_init(
+            k1, cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias, dtype=dtype,
+        )
+    p["ln2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if is_moe:
+        p["moe"] = MOE.moe_init(
+            k2, cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts, dtype=dtype
+        )
+        if cfg.shared_expert:
+            p["mlp"] = L.mlp_init(k3, cfg.d_model, cfg.moe_d_ff or cfg.d_ff, dtype=dtype)
+    elif kind != "rwkv":
+        p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype=dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 4)
+    params: Params = {
+        "embedding": L.embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembedding"] = L.embed_init(keys[3], cfg.padded_vocab, cfg.d_model, dtype)
+
+    if cfg.attn_period > 0:
+        # hybrid: stack per-period; period body is unrolled
+        period = cfg.attn_period
+        num_periods = cfg.layers // period
+        stacks = []
+        for j in range(period):
+            kind = cfg.layer_kind(j)
+            is_moe = cfg.layer_is_moe(j)
+            lkeys = jax.random.split(jax.random.fold_in(keys[1], j), num_periods)
+            stacks.append(
+                jax.vmap(lambda k: _layer_init(k, cfg, kind, is_moe))(lkeys)
+            )
+        params["periods"] = stacks
+    else:
+        kind = cfg.layer_kind(0)
+        is_moe_any = cfg.is_moe
+        if is_moe_any and cfg.moe_every > 1:
+            # alternate dense/moe: two stacks interleaved
+            n_moe = sum(cfg.layer_is_moe(i) for i in range(cfg.layers))
+            n_dense = cfg.layers - n_moe
+            params["layers_dense"] = jax.vmap(
+                lambda k: _layer_init(k, cfg, kind, False)
+            )(jax.random.split(keys[1], max(n_dense, 1)))
+            params["layers_moe"] = jax.vmap(
+                lambda k: _layer_init(k, cfg, kind, True)
+            )(jax.random.split(keys[2], max(n_moe, 1)))
+        else:
+            params["layers"] = jax.vmap(
+                lambda k: _layer_init(k, cfg, kind, is_moe_any)
+            )(jax.random.split(keys[1], cfg.layers))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+
+
+def _dp_axes(mesh):
+    return tuple(a for a in ("pod", "data") if mesh is not None and a in mesh.axis_names)
+
+
+def _constrain_act(x, mesh, batch, enabled=True):
+    """Pin the residual stream to batch-sharded (DP axes): prevents the SPMD
+    partitioner from drifting to batch-replicated layouts that all-reduce
+    [B, H, S, S]-sized tensors (see EXPERIMENTS §Perf, hypothesis H1)."""
+    if mesh is None or not enabled:
+        return x
+    dp = _dp_axes(mesh)
+    if not dp:
+        return x
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if batch % size != 0:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = P(dp if len(dp) > 1 else dp[0], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _apply_layer(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    is_moe: bool,
+    positions: jax.Array,
+    cache: Optional[Dict] = None,
+    cache_index=None,
+    mesh=None,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x, new_cache, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    if kind == "rwkv":
+        if cache is not None and x.shape[1] == 1:
+            x, new_cache = R.rwkv6_block_decode(p, x, cache, num_heads=cfg.num_heads)
+        else:
+            x, new_cache = R.rwkv6_block_apply(
+                p, x, num_heads=cfg.num_heads, chunk=cfg.la_chunk, state=cache,
+                unroll=cfg.analysis_unroll,
+            )
+        return _constrain_act(x, mesh, x.shape[0], cfg.opt_act_sharding), new_cache, aux
+    if kind == "mamba":
+        H = max(cfg.mamba_expand * cfg.d_model // 64, 1)
+        if cache is not None and x.shape[1] == 1:
+            x, new_cache = M.mamba_block_decode(
+                p["mixer"], x, cache, num_heads=H, d_state=cfg.mamba_d_state
+            )
+        else:
+            x, new_cache = M.mamba_block_apply(
+                p["mixer"], x, num_heads=H, d_state=cfg.mamba_d_state,
+                chunk=cfg.la_chunk, state=cache, unroll=cfg.analysis_unroll,
+            )
+    else:
+        h = L.rmsnorm(p["ln1"], x)
+        attn_out, new_cache = L.attention_apply(
+            p["attn"], h,
+            num_heads=cfg.num_heads, kv_heads=cfg.kv_heads,
+            head_dim=cfg.resolved_head_dim, positions=positions,
+            rope_theta=cfg.rope_theta, cache=cache, cache_index=cache_index,
+            kv_chunk=cfg.attention_chunk, decode_fastpath=cfg.opt_decode_fastpath,
+            scan_unroll=cfg.analysis_unroll,
+        )
+        x = x + attn_out
+
+    h = L.rmsnorm(p["ln2"], x)
+    if is_moe:
+        dp_axes = tuple(a for a in ("pod", "data") if mesh is not None and a in mesh.axis_names)
+        dp_size = 1
+        if mesh is not None:
+            for a in dp_axes:
+                dp_size *= mesh.shape[a]
+        use_ep = (
+            mesh is not None
+            and "model" in mesh.axis_names
+            and cfg.num_experts % mesh.shape["model"] == 0
+            and x.shape[0] % dp_size == 0
+        )
+        # slot-loop dispatch wins at decode (small N: avoids replica-tensor
+        # collectives) but loses at train under unfused accounting (top_k
+        # read-modify-writes of the capacity buffer) — §Perf H3: shape-adaptive
+        slot_loop = cfg.opt_moe_slot_loop and x.shape[1] == 1
+        if use_ep:
+            y, aux = MOE.moe_apply_ep(
+                p["moe"], h, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                mesh=mesh, data_axes=dp_axes, slot_loop=slot_loop,
+            )
+        else:
+            y, aux = MOE.moe_apply(
+                p["moe"], h, num_experts=cfg.num_experts, top_k=cfg.top_k,
+                slot_loop=slot_loop,
+            )
+        if cfg.shared_expert:
+            y = y + L.mlp_apply(p["mlp"], h)
+        x = x + y
+    elif kind != "rwkv" and "mlp" in p:
+        x = x + L.mlp_apply(p["mlp"], h)
+    x = _constrain_act(x, mesh, x.shape[0], cfg.opt_act_sharding)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+
+def _mask_pad_vocab(logits, cfg):
+    """Pad-row logits → −inf so padded embeddings are semantically inert."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+    return jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+
+
+def _constrain_logits(logits, mesh, cfg):
+    """Logits: batch over DP, vocab over model (when divisible)."""
+    if mesh is None or not cfg.opt_act_sharding:
+        return logits
+    dp = _dp_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    b_ok = dp and logits.shape[0] % size == 0
+    v_ok = "model" in mesh.axis_names and cfg.padded_vocab % mesh.shape["model"] == 0
+    spec = P(
+        (dp if len(dp) > 1 else dp[0]) if b_ok else None,
+        None,
+        "model" if v_ok else None,
+    )
+    return jax.lax.with_sharding_constraint(logits, NamedSharding(mesh, spec))
+
+
+def forward(
+    params: Params,
+    tokens_or_embeds: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Dict] = None,
+    cache_index=None,
+    mesh=None,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (logits, new_cache, moe_aux_sum).
+
+    ``tokens_or_embeds``: int tokens [B, T] or precomputed embeddings
+    [B, T, D] (modality-frontend stubs feed embeddings directly).
+    """
+    if tokens_or_embeds.ndim == 2:
+        x = params["embedding"][tokens_or_embeds]
+    else:
+        x = tokens_or_embeds.astype(jnp.dtype(cfg.dtype))
+    B, T = x.shape[:2]
+    x = _constrain_act(x, mesh, B, cfg.opt_act_sharding)
+    if positions is None:
+        base = cache_index if cache_index is not None else 0
+        positions = base + jnp.arange(T)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def maybe_remat(f):
+        return jax.checkpoint(f, prevent_cse=False) if cfg.remat else f
+
+    if not cfg.scan_layers:
+        # unrolled python loop (analysis path: HLO cost covers every layer —
+        # scan bodies are counted once by cost_analysis, see launch/dryrun.py)
+        new_cache = [] if cache is not None else None
+        for i in range(cfg.layers):
+            kind = cfg.layer_kind(i)
+            moe_i = cfg.layer_is_moe(i)
+            if cfg.attn_period > 0:
+                period, j = divmod(i, cfg.attn_period)
+                lp = jax.tree.map(lambda a: a[period], params["periods"][j])
+                ci = jax.tree.map(lambda a: a[period], cache[j]) if cache is not None else None
+            elif cfg.is_moe and cfg.moe_every > 1:
+                stack = params["layers_moe"] if moe_i else params["layers_dense"]
+                idx = sum(1 for q in range(i) if cfg.layer_is_moe(q) == moe_i)
+                lp = jax.tree.map(lambda a: a[idx], stack)
+                ci = cache[i] if cache is not None else None
+            else:
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                ci = jax.tree.map(lambda a: a[i], cache) if cache is not None else None
+            x, nc, a = _apply_layer(
+                lp, x, cfg, kind, moe_i, positions,
+                cache=ci, cache_index=cache_index, mesh=mesh,
+            )
+            aux_total = aux_total + a
+            if new_cache is not None:
+                new_cache.append(nc if nc is not None else ci)
+        x = L.rmsnorm(params["final_norm"], x)
+        unemb = params.get("unembedding", params["embedding"])
+        logits = _constrain_logits(_mask_pad_vocab(L.unembed(x, unemb), cfg), mesh, cfg)
+        return logits, new_cache, aux_total
+
+    if cfg.attn_period > 0:
+        num_periods = cfg.layers // cfg.attn_period
+        period_kinds = [cfg.layer_kind(j) for j in range(cfg.attn_period)]
+        period_moe = [cfg.layer_is_moe(j) for j in range(cfg.attn_period)]
+
+        def period_body(carry, xs):
+            x, aux = carry
+            pparams, pcache = xs
+
+            def inner(x, pparams, pcache):
+                new_caches = []
+                a = jnp.zeros((), jnp.float32)
+                for j, (kind, moe_j) in enumerate(zip(period_kinds, period_moe)):
+                    cj = pcache[j] if pcache is not None else None
+                    x, nc, aj = _apply_layer(
+                        pparams[j], x, cfg, kind, moe_j, positions,
+                        cache=cj, cache_index=cache_index, mesh=mesh,
+                    )
+                    new_caches.append(nc if nc is not None else cj)
+                    a = a + aj
+                return x, new_caches, a
+
+            x, ncs, a = maybe_remat(inner)(x, pparams, pcache)
+            return (x, aux + a), ncs
+
+        pcaches = cache if cache is not None else [None] * cfg.attn_period
+        if cache is None:
+            # scan without cache ys
+            def body_nocache(carry, pparams):
+                (x, aux), _ = period_body(carry, (pparams, None))
+                return (x, aux), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                body_nocache, (x, aux_total), tuple(params["periods"])
+            )
+            new_cache = None
+        else:
+            (x, aux_total), new_cache = jax.lax.scan(
+                period_body, (x, aux_total), (tuple(params["periods"]), cache)
+            )
+    else:
+        kind = cfg.layer_kind(0)
+        if cfg.is_moe and cfg.moe_every > 1:
+            # interleaved dense/MoE: unrolled pairs of scans is complex; use
+            # python loop over layers with per-layer slice (depth is small for
+            # these configs).
+            new_cache = [] if cache is not None else None
+            for i in range(cfg.layers):
+                moe_i = cfg.layer_is_moe(i)
+                stack = params["layers_moe"] if moe_i else params["layers_dense"]
+                idx = sum(
+                    1 for j in range(i) if cfg.layer_is_moe(j) == moe_i
+                )
+                lp = jax.tree.map(lambda a: a[idx], stack)
+                ci = cache[i] if cache is not None else None
+                x, nc, a = maybe_remat(
+                    functools.partial(
+                        _apply_layer, cfg=cfg, kind=kind, is_moe=moe_i,
+                        positions=positions, cache_index=cache_index, mesh=mesh,
+                    )
+                )(lp, x, cache=ci)
+                aux_total = aux_total + a
+                if new_cache is not None:
+                    new_cache.append(nc)
+        else:
+            is_moe = cfg.is_moe
+
+            def layer_body(carry, xs):
+                x, aux = carry
+                lp, lc = xs
+
+                def inner(x, lp, lc):
+                    return _apply_layer(
+                        lp, x, cfg, kind, is_moe, positions,
+                        cache=lc, cache_index=cache_index, mesh=mesh,
+                    )
+
+                x, nc, a = maybe_remat(inner)(x, lp, lc)
+                return (x, aux + a), nc
+
+            if cache is None:
+                def body_nc(carry, lp):
+                    x, aux = carry
+
+                    def inner(x, lp):
+                        return _apply_layer(
+                            lp, x, cfg, kind, is_moe, positions,
+                            cache=None, cache_index=cache_index, mesh=mesh,
+                        )
+
+                    x, _, a = maybe_remat(inner)(x, lp)
+                    return (x, aux + a), None
+
+                (x, aux_total), _ = jax.lax.scan(
+                    body_nc, (x, aux_total), params["layers"]
+                )
+                new_cache = None
+            else:
+                (x, aux_total), new_cache = jax.lax.scan(
+                    layer_body, (x, aux_total), (params["layers"], cache)
+                )
+
+    x = L.rmsnorm(params["final_norm"], x)
+    unemb = params.get("unembedding", params["embedding"])
+    logits = _mask_pad_vocab(L.unembed(x, unemb), cfg)
+    logits = _constrain_logits(logits, mesh, cfg)
+    return logits, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Any:
+    """Decode cache pytree, stacked per layer (or per period for hybrids)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+
+    def attn_cache():
+        return {
+            "k": jnp.zeros((batch, max_len, cfg.kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.kv_heads, hd), dtype),
+        }
+
+    def mamba_cache():
+        return M.mamba_init_state(
+            batch, cfg.d_model, expand=cfg.mamba_expand,
+            d_state=cfg.mamba_d_state,
+        )
+
+    def rwkv_cache():
+        return R.rwkv6_init_state(batch, cfg.d_model, cfg.num_heads, dtype)
+
+    if cfg.attn_period > 0:
+        num_periods = cfg.layers // cfg.attn_period
+        stack = lambda c: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (num_periods,) + a.shape).copy(), c
+        )
+        return [
+            stack(attn_cache() if cfg.layer_kind(j) == "attn" else mamba_cache())
+            for j in range(cfg.attn_period)
+        ]
+    kind = cfg.layer_kind(0)
+    base = {"rwkv": rwkv_cache, "mamba": mamba_cache, "attn": attn_cache}[kind]()
+    if cfg.is_moe and cfg.moe_every > 1:
+        return [jax.tree.map(jnp.copy, base) for _ in range(cfg.layers)]
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.layers,) + a.shape).copy(), base
+    )

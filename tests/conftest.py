@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 device by design;
+multi-device behaviour is tested via subprocesses (test_distributed.py)."""
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)
+    yield

@@ -1,0 +1,135 @@
+"""Format containers: round-trips, CSR-k invariants, overhead bound."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (
+    COOMatrix, CSRMatrix, build_csrk, tiles_from_csrk,
+    ell_from_csr, bcsr_from_csr,
+)
+from repro.configs.spmv_suite import grid_laplacian_2d, road_graph, fem_block
+
+
+def random_csr(rng, m=64, n=64, density=0.1):
+    dense = (rng.random((m, n)) < density) * rng.standard_normal((m, n))
+    return CSRMatrix.fromdense(dense.astype(np.float32)), dense.astype(np.float32)
+
+
+def test_coo_csr_dense_roundtrip(rng):
+    A, dense = random_csr(rng)
+    np.testing.assert_allclose(np.asarray(A.todense()), dense, rtol=1e-6)
+    coo = A.tocoo()
+    np.testing.assert_allclose(np.asarray(coo.todense()), dense, rtol=1e-6)
+    back = coo.tocsr()
+    np.testing.assert_allclose(np.asarray(back.todense()), dense, rtol=1e-6)
+
+
+def test_csrk_is_csr_view(rng):
+    """The heterogeneity claim: CSR-k's base arrays ARE the CSR arrays."""
+    A, dense = random_csr(rng)
+    k3 = build_csrk(A, srs=4, ssrs=4, k=3)
+    k3.validate()
+    assert k3.csr.row_ptr is A.row_ptr
+    assert k3.csr.col_idx is A.col_idx
+    assert k3.csr.vals is A.vals
+    np.testing.assert_allclose(np.asarray(k3.todense()), dense, rtol=1e-6)
+
+
+@pytest.mark.parametrize("srs,ssrs", [(1, 1), (3, 2), (8, 4), (64, 1)])
+def test_csrk_pointer_invariants(rng, srs, ssrs):
+    A, _ = random_csr(rng, m=100)
+    k3 = build_csrk(A, srs=srs, ssrs=ssrs, k=3)
+    k3.validate()
+    sr = np.asarray(k3.sr_ptr)
+    ssr = np.asarray(k3.ssr_ptr)
+    assert sr[-1] == A.m
+    assert ssr[-1] == k3.num_sr
+    assert np.all(np.diff(sr) <= srs)
+    assert np.all(np.diff(ssr) <= ssrs)
+
+
+def test_paper_overhead_bound():
+    """Paper claim: CSR-3 + CSR-2 pointer overhead < 2.5% over CSR."""
+    for mat in [grid_laplacian_2d(48, 48), road_graph(2048, seed=3),
+                fem_block(256, block=8)]:
+        k3 = build_csrk(mat, srs=8, ssrs=4, k=3)
+        k2 = build_csrk(mat, srs=96, k=2)
+        both = k3.overhead_fraction() + k2.overhead_fraction()
+        assert both < 0.025, f"{mat.shape}: {both:.4f}"
+
+
+def test_tiles_cover_all_nnz(rng):
+    A, dense = random_csr(rng, m=64, n=64, density=0.2)
+    k3 = build_csrk(A, srs=4, ssrs=2, k=3)
+    tiles = tiles_from_csrk(k3)
+    in_tile = int(np.count_nonzero(np.asarray(tiles.vals)))
+    total = in_tile + tiles.remainder_nnz
+    # vals can contain explicit zeros; count via oracle equality instead
+    x = rng.standard_normal(A.n).astype(np.float32)
+    from repro.kernels.ref import spmv_csrk_tiles
+    y = spmv_csrk_tiles(tiles, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=2e-4, atol=1e-4)
+
+
+def test_tiles_require_uniform_ssr(rng):
+    A, _ = random_csr(rng, m=64)
+    k3 = build_csrk(A, srs=5, ssrs=3, k=3)  # 64/15 → ragged last SSR is fine
+    tiles = tiles_from_csrk(k3)             # uniform stride 15 until tail
+    assert tiles.rows_per_tile == 15
+
+
+def test_ell_padding_and_value(rng):
+    A, dense = random_csr(rng, m=32, n=32, density=0.15)
+    ell = ell_from_csr(A)
+    np.testing.assert_allclose(np.asarray(ell.todense()), dense, rtol=1e-6)
+    assert ell.padding_overhead() >= 0
+
+
+def test_bcsr_roundtrip(rng):
+    A, dense = random_csr(rng, m=32, n=32, density=0.2)
+    b = bcsr_from_csr(A, br=8, bc=8)
+    np.testing.assert_allclose(
+        np.asarray(b.todense())[:32, :32], dense, rtol=1e-6
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(4, 48),
+    srs=st.integers(1, 8),
+    ssrs=st.integers(1, 4),
+    seed=st.integers(0, 100),
+)
+def test_property_csrk_spmv_matches_dense(m, srs, ssrs, seed):
+    """Property: any CSR-k grouping computes the same SpMV as dense."""
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((m, m)) < 0.2) * rng.standard_normal((m, m))
+    dense = dense.astype(np.float32)
+    A = CSRMatrix.fromdense(dense)
+    if A.nnz == 0:
+        return
+    k3 = build_csrk(A, srs=srs, ssrs=ssrs, k=3)
+    tiles = tiles_from_csrk(k3)
+    x = rng.standard_normal(m).astype(np.float32)
+    from repro.kernels.ref import spmv_csrk_tiles
+    y = spmv_csrk_tiles(tiles, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=2e-3, atol=2e-4)
+
+
+def test_csr5_like_matches_dense_with_empty_rows(rng):
+    """CSR5-like stand-in (paper Sec. 2.4 competitor): exact SpMV incl.
+    empty rows, and its tile metadata overhead exceeds CSR-k's pointer
+    overhead (the paper's Sec. 8 comparison)."""
+    from repro.core.formats import csr5_from_csr
+    from repro.kernels.ref import spmv_csr5_like
+    dense = ((rng.random((48, 48)) < 0.1) * rng.standard_normal((48, 48))).astype(np.float32)
+    dense[7] = 0.0
+    dense[20] = 0.0
+    A = CSRMatrix.fromdense(dense)
+    c5 = csr5_from_csr(A)
+    x = rng.standard_normal(48).astype(np.float32)
+    y = spmv_csr5_like(c5, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=2e-4, atol=1e-5)
+    k3 = build_csrk(A, srs=8, ssrs=4, k=3)
+    assert c5.overhead_fraction() > k3.overhead_fraction()

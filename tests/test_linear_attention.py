@@ -1,0 +1,130 @@
+"""Chunked decayed linear attention engine vs naive recurrence (oracle),
+plus flash attention vs exact softmax attention."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.models.linear_attention import (
+    LOG_W_MIN, chunked_linear_attention, linear_attention_decode,
+)
+from repro.models.layers import flash_attention
+
+
+def naive_recurrence(r, k, v, log_w, u=None):
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    S = np.zeros((B, H, K, V))
+    outs = []
+    r, k, v, log_w = map(np.asarray, (r, k, v, log_w))
+    for t in range(T):
+        kv = k[:, :, t, :, None] * v[:, :, t, None, :]
+        att = S + (np.asarray(u)[None, :, :, None] * kv if u is not None else 0)
+        outs.append(np.einsum("bhk,bhkv->bhv", r[:, :, t], att))
+        S = S * np.exp(log_w[:, :, t])[..., None] + kv
+    return np.stack(outs, axis=2), S
+
+
+# chunk ≤ 32 per the engine's numerical contract (span ≤ 80 nats)
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+@pytest.mark.parametrize("with_u", [True, False])
+def test_chunked_matches_naive(rng, chunk, with_u):
+    B, H, T, K, V = 2, 2, 64, 8, 6
+    r = jnp.asarray(rng.standard_normal((B, H, T, K)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, T, K)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, H, T, V)), jnp.float32)
+    lw = jnp.clip(-jnp.asarray(rng.random((B, H, T, K)), jnp.float32) * 3, LOG_W_MIN, -1e-4)
+    u = jnp.asarray(rng.standard_normal((H, K)), jnp.float32) * 0.2 if with_u else None
+    o, S = chunked_linear_attention(r, k, v, lw, u=u, chunk=chunk)
+    o_ref, S_ref = naive_recurrence(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(o), o_ref, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), S_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_initial_state_continuation(rng):
+    """Processing [0:T/2] then [T/2:T] with carried state == full pass."""
+    B, H, T, K, V = 1, 2, 32, 4, 4
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    r, k, v = mk(B, H, T, K), mk(B, H, T, K) * 0.3, mk(B, H, T, V)
+    lw = jnp.clip(-jnp.asarray(rng.random((B, H, T, K)), jnp.float32), LOG_W_MIN, -1e-4)
+    o_full, S_full = chunked_linear_attention(r, k, v, lw, chunk=8)
+    h = T // 2
+    o1, S1 = chunked_linear_attention(r[:, :, :h], k[:, :, :h], v[:, :, :h], lw[:, :, :h], chunk=8)
+    o2, S2 = chunked_linear_attention(
+        r[:, :, h:], k[:, :, h:], v[:, :, h:], lw[:, :, h:], chunk=8, initial_state=S1
+    )
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o_full[:, :, h:]), rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(S2), np.asarray(S_full), rtol=1e-3, atol=1e-5)
+
+
+def test_decode_chain_matches_chunked(rng):
+    B, H, T, K, V = 1, 1, 16, 4, 4
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    r, k, v = mk(B, H, T, K), mk(B, H, T, K) * 0.5, mk(B, H, T, V)
+    lw = jnp.clip(-jnp.asarray(rng.random((B, H, T, K)), jnp.float32), LOG_W_MIN, -1e-4)
+    u = mk(H, K) * 0.1
+    o_ref, S_ref = chunked_linear_attention(r, k, v, lw, u=u, chunk=8)
+    S = jnp.zeros((B, H, K, V))
+    outs = []
+    for t in range(T):
+        o, S = linear_attention_decode(
+            r[:, :, t], k[:, :, t], v[:, :, t], lw[:, :, t], S, u=u
+        )
+        outs.append(o)
+    o_dec = jnp.stack(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(o_dec), np.asarray(o_ref), rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref), rtol=1e-3, atol=1e-5)
+
+
+# --- flash attention ---------------------------------------------------------
+
+
+def exact_attention(q, k, v, causal=True):
+    B, Tq, H, Dh = q.shape
+    Tk = k.shape[1]
+    s = np.einsum("bqhd,bkhd->bhqk", np.asarray(q, np.float64), np.asarray(k, np.float64))
+    s /= np.sqrt(Dh)
+    if causal:
+        mask = np.tril(np.ones((Tq, Tk)), k=Tk - Tq)
+        s = np.where(mask[None, None], s, -np.inf)
+    p = np.exp(s - s.max(axis=-1, keepdims=True))
+    p /= p.sum(axis=-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, np.asarray(v, np.float64))
+
+
+@pytest.mark.parametrize("Tq,Tk,chunk", [(16, 16, 4), (8, 32, 8), (32, 32, 32), (5, 13, 4)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_exact(rng, Tq, Tk, chunk, causal):
+    B, H, Dh = 2, 3, 8
+    q = jnp.asarray(rng.standard_normal((B, Tq, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Tk, H, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Tk, H, Dh)), jnp.float32)
+    off = Tk - Tq if causal else 0
+    out = flash_attention(q, k, v, causal=causal, q_offset=off, kv_chunk=chunk)
+    ref = exact_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_kv_valid_len_masks_padding(rng):
+    B, T, H, Dh = 1, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, 1, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, H, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, H, Dh)), jnp.float32)
+    kpad = jnp.concatenate([k, 100 * jnp.ones((B, 4, H, Dh))], axis=1)
+    vpad = jnp.concatenate([v, 100 * jnp.ones((B, 4, H, Dh))], axis=1)
+    out = flash_attention(q, k, v, causal=False, kv_chunk=4)
+    outp = flash_attention(q, kpad, vpad, causal=False, kv_chunk=4, kv_valid_len=jnp.asarray(T))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outp), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), T=st.integers(2, 24))
+def test_property_flash_rowsum_one(seed, T):
+    """Flash output lies in the convex hull of V rows (causal, q=last)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 4)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, T, 1, 4)), jnp.float32)
+    v = jnp.ones((1, T, 1, 4), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_offset=T - 1, kv_chunk=5)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-4)

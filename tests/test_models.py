@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes + no NaNs, plus decode-path consistency."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import all_archs, get_smoke_config, get_config, supported_shapes
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+from repro.models.frontends import vlm_prepend
+from repro.launch import steps as STEPS
+from repro.optim.adamw import AdamWConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    B, T = 2, 16
+    tokens = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    if cfg.is_encdec:
+        params = ED.init_params(KEY, cfg)
+        enc_in = jax.random.normal(KEY, (B, cfg.frontend_seq, cfg.d_model))
+        logits, _ = ED.decode(params, tokens, ED.encode(params, enc_in, cfg), cfg)
+        T_out = T
+    elif cfg.frontend == "vit":
+        params = TF.init_params(KEY, cfg)
+        pe = jax.random.normal(KEY, (B, cfg.frontend_seq, cfg.d_model))
+        logits, _, _ = TF.forward(params, vlm_prepend(params, pe, tokens, cfg), cfg)
+        T_out = T + cfg.frontend_seq
+    else:
+        params = TF.init_params(KEY, cfg)
+        logits, _, _ = TF.forward(params, tokens, cfg)
+        T_out = T
+    assert logits.shape == (B, T_out, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    B, T = 2, 16
+    params = (ED if cfg.is_encdec else TF).init_params(KEY, cfg)
+    from repro.optim import adamw
+    opt = adamw.init(params)
+    step = STEPS.make_train_step(cfg, AdamWConfig(total_steps=10, warmup_steps=1))
+    tokens = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    labels = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    extra = None
+    if cfg.is_encdec or cfg.frontend == "vit":
+        extra = jax.random.normal(KEY, (B, cfg.frontend_seq, cfg.d_model))
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, tokens, labels, extra)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt.step) == 1
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        params, new_params,
+    )
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "qwen2-7b", "rwkv6-3b",
+                                   "jamba-v0.1-52b", "kimi-k2-1t-a32b"])
+def test_decode_matches_full_forward(arch):
+    """Step-by-step cached decode must reproduce the full forward pass."""
+    cfg = get_smoke_config(arch)
+    B, T = 2, 8
+    params = TF.init_params(KEY, cfg)
+    tokens = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    full, _, _ = TF.forward(params, tokens, cfg)
+    cache = TF.init_cache(cfg, B, T)
+    for t in range(T):
+        logits, cache, _ = TF.forward(
+            params, tokens[:, t : t + 1], cfg,
+            cache=cache, cache_index=jnp.asarray(t, jnp.int32),
+        )
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_seamless_decode_consistency():
+    cfg = get_smoke_config("seamless-m4t-medium")
+    B, T = 2, 6
+    params = ED.init_params(KEY, cfg)
+    enc_in = jax.random.normal(KEY, (B, cfg.frontend_seq, cfg.d_model))
+    enc_out = ED.encode(params, enc_in, cfg)
+    tokens = jax.random.randint(KEY, (B, T), 0, cfg.vocab)
+    full, _ = ED.decode(params, tokens, enc_out, cfg)
+    cache = ED.init_cache(cfg, B, T)
+    for t in range(T):
+        logits, cache = ED.decode(
+            params, tokens[:, t : t + 1], enc_out, cfg,
+            cache=cache, cache_index=jnp.asarray(t, jnp.int32),
+        )
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_supported_shapes_rules():
+    """long_500k only for sub-quadratic archs; everyone decodes."""
+    for arch in all_archs():
+        cfg = get_config(arch)
+        shapes = supported_shapes(cfg)
+        assert "decode_32k" in shapes
+        if arch in ("rwkv6-3b", "jamba-v0.1-52b"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+
+
+def test_param_count_sanity():
+    """Configured param counts land near the advertised model sizes."""
+    approx = {
+        "qwen1.5-32b": (32e9, 0.25),
+        "qwen2-7b": (7.6e9, 0.25),
+        "deepseek-7b": (7e9, 0.25),
+        "granite-3-2b": (2.5e9, 0.3),
+        "kimi-k2-1t-a32b": (1.0e12, 0.3),
+        "rwkv6-3b": (3.1e9, 0.35),
+    }
+    for arch, (target, tol) in approx.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n, target)

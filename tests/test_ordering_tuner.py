@@ -1,0 +1,147 @@
+"""Band-k ordering, RCM, and the constant-time tuning model (paper Sec. 4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import CSRMatrix
+from repro.core.ordering import bandk, bandwidth, rcm, graph_from_csr, coarsen
+from repro.core import tuner
+from repro.configs.spmv_suite import grid_laplacian_2d, road_graph
+
+
+def test_rcm_reduces_bandwidth_on_shuffled_grid(rng):
+    A = grid_laplacian_2d(24, 24)
+    perm = rng.permutation(A.m)
+    shuffled = A.symmetric_permute(perm)
+    bw0 = bandwidth(shuffled)
+    bw_rcm = bandwidth(shuffled.symmetric_permute(rcm(shuffled)))
+    assert bw_rcm < bw0 / 4, (bw0, bw_rcm)
+
+
+def test_bandk_reduces_bandwidth_on_shuffled_graph(rng):
+    A = road_graph(1024, seed=9)
+    perm = rng.permutation(A.m)
+    shuffled = A.symmetric_permute(perm)
+    bw0 = bandwidth(shuffled)
+    bw_bk = bandwidth(shuffled.symmetric_permute(bandk(shuffled, k=3)))
+    # paper Sec 2.2: Band-k is slightly wider than RCM but still band-limiting
+    assert bw_bk < 0.7 * bw0, (bw0, bw_bk)
+    bw_rcm = bandwidth(shuffled.symmetric_permute(rcm(shuffled)))
+    assert bw_bk < 6 * max(bw_rcm, 1), (bw_bk, bw_rcm)
+
+
+def test_bandk_is_permutation(rng):
+    A = road_graph(512, seed=4)
+    perm = bandk(A, k=3)
+    assert sorted(perm.tolist()) == list(range(A.m))
+
+
+def test_coarsening_shrinks_and_conserves_weight():
+    A = grid_laplacian_2d(16, 16)
+    g = graph_from_csr(A)
+    gc, f2c = coarsen(g)
+    assert gc.n < g.n
+    assert np.isclose(gc.node_w.sum(), g.node_w.sum())
+    assert f2c.max() == gc.n - 1
+
+
+# --- paper Sec. 4 formulas, verbatim checks --------------------------------
+
+def test_volta_formula_values():
+    # rdensity=1 → ln=0 → SSRS=⌊8.900⌉=9, SRS=⌊10.146⌉=10
+    p = tuner.tune_volta(1.0)
+    assert (p.ssrs, p.srs) == (9, 10)
+    assert not p.use_inner_parallel
+
+
+def test_ampere_formula_values():
+    p = tuner.tune_ampere(1.0)
+    assert (p.ssrs, p.srs) == (9, 21)  # ⌊9.175⌉=9, ⌊20.500⌉ rounds half-up → 21
+
+
+def test_ampere_case2_srs_x4():
+    rd = 10.0
+    base_ssrs, base_srs = tuner.AMPERE.base(rd)
+    p = tuner.tune_ampere(rd)
+    assert p.ssrs == base_ssrs
+    assert p.srs == base_srs * 4
+    assert p.use_inner_parallel
+
+
+def test_inner_parallel_threshold_is_8():
+    """Paper: intra-row parallelism pays off at rdensity ≥ 8."""
+    assert not tuner.tune_tpu(7.9).use_inner_parallel
+    assert tuner.tune_tpu(8.0).use_inner_parallel
+
+
+def test_tpu_rows_per_ssr_alignment():
+    for rd in [1.0, 3.0, 7.9, 9.0, 20.0, 50.0, 100.0]:
+        p = tuner.tune_tpu(rd)
+        assert p.rows_per_ssr % 8 == 0, (rd, p)
+
+
+def test_cpu_constant_srs_is_96():
+    assert tuner.tune_cpu(5.0).srs == 96
+    assert tuner.tune_cpu(5.0).k == 2
+
+
+def test_sweep_sets_match_paper():
+    assert tuner.GPU_SWEEP == [4, 6, 8, 12, 16, 24, 32, 48]
+    assert tuner.CPU_SRS_SWEEP[0] == 8
+    assert tuner.CPU_SRS_SWEEP[-1] == 3072
+
+
+def test_fit_log_model_recovers_coefficients():
+    a, b = 9.2, 1.3
+    rd = np.asarray([2.0, 4.0, 8.0, 16.0, 32.0, 64.0])
+    sizes = a - b * np.log(rd)
+    ahat, bhat = tuner.fit_log_model(rd, sizes)
+    assert abs(ahat - a) < 1e-6 and abs(bhat - b) < 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(rd=st.floats(1.0, 200.0))
+def test_property_tuner_total_time_constant(rd):
+    """Tuning is O(1): pure arithmetic, sizes positive and bounded."""
+    for dev in ("volta", "ampere", "tpu_v5e", "cpu"):
+        p = tuner.tune(rd, device=dev)
+        assert p.ssrs >= 1 and p.srs >= 1
+        assert p.rows_per_ssr < 1_000_000
+
+
+@settings(max_examples=30, deadline=None)
+@given(rd=st.floats(1.0, 200.0))
+def test_property_denser_means_shorter_tiles(rd):
+    """Monotonicity of the log model: base sizes shrink as density grows."""
+    lo = tuner.TPU_V5E.base(rd)
+    hi = tuner.TPU_V5E.base(rd * 2)
+    assert hi[0] <= lo[0] and hi[1] <= lo[1]
+
+
+def test_adaptive_tuner_never_worse_and_correct(rng):
+    """Beyond-paper variance-aware tuner: modeled kernel bytes ≤ the paper
+    formula's, and the resulting operator stays exact."""
+    import jax.numpy as jnp
+    from repro.core.spmv import prepare
+    from repro.core.tuner import tile_bytes_model
+    from repro.configs.spmv_suite import grid_laplacian_2d
+    from repro.kernels import ref
+
+    A = grid_laplacian_2d(32, 32)
+    x = jnp.asarray(rng.standard_normal(A.m), jnp.float32)
+    base = prepare(A, device="tpu_v5e", reorder="bandk")
+    adpt = prepare(A, device="tpu_v5e", reorder="bandk", adaptive=True)
+    err = float(jnp.abs(adpt.apply_original(x) - ref.spmv_csr(A, x)).max())
+    assert err < 1e-4
+
+    def modeled(op):
+        rp = np.asarray(op.csrk.row_ptr)
+        ci = np.asarray(op.csrk.col_idx)
+        cmin = np.empty(op.csrk.m, np.int64)
+        cmax = np.empty(op.csrk.m, np.int64)
+        for i in range(op.csrk.m):
+            s, t = rp[i], rp[i + 1]
+            cmin[i], cmax[i] = (ci[s:t].min(), ci[s:t].max()) if t > s else (0, 0)
+        return tile_bytes_model(rp, cmin, cmax, op.params.rows_per_ssr)[0]
+
+    assert modeled(adpt) <= modeled(base)

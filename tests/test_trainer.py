@@ -1,0 +1,87 @@
+"""End-to-end trainer: loss decreases, checkpoint/restart resumes exactly,
+failure injection + supervisor restart works."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.train import trainer as TR
+
+
+def _setup(steps, ckpt_dir=None, failure_at=None, schedule_steps=None):
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"), layers=2)
+    # schedule length is independent of how many steps THIS invocation runs,
+    # so partial runs + resumes see identical LR trajectories
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2,
+                      total_steps=schedule_steps or steps, grad_clip=1.0)
+    data = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=4, seed=1)
+    tcfg = TR.TrainerConfig(
+        steps=steps, ckpt_dir=ckpt_dir, ckpt_every=5, log_every=100,
+        failure_at=failure_at,
+    )
+    return cfg, opt, data, tcfg
+
+
+def test_loss_decreases():
+    cfg, opt, data, tcfg = _setup(steps=30)
+    metrics = []
+    TR.train(cfg, opt, data, tcfg, make_host_mesh(), metrics_out=metrics)
+    first = np.mean([m["loss"] for m in metrics[:5]])
+    last = np.mean([m["loss"] for m in metrics[-5:]])
+    assert last < first - 0.2, (first, last)
+
+
+def test_checkpoint_restart_exact_resume(tmp_path):
+    """Train 20 straight vs 10 + restart + 10 → identical final loss."""
+    cfg, opt, data, tcfg = _setup(steps=20)
+    m_straight = []
+    TR.train(cfg, opt, data, tcfg, make_host_mesh(), metrics_out=m_straight)
+
+    d = str(tmp_path / "ck")
+    cfg, opt, data, tcfg = _setup(steps=10, ckpt_dir=d, schedule_steps=20)
+    TR.train(cfg, opt, data, tcfg, make_host_mesh())
+    cfg, opt, data, tcfg = _setup(steps=20, ckpt_dir=d)
+    m_resumed = []
+    TR.train(cfg, opt, data, tcfg, make_host_mesh(), metrics_out=m_resumed)
+    assert m_resumed[0]["step"] == 11  # resumed from step-10 checkpoint
+    np.testing.assert_allclose(
+        m_straight[-1]["loss"], m_resumed[-1]["loss"], rtol=1e-4
+    )
+
+
+def test_failure_injection_and_supervisor_restart(tmp_path):
+    d = str(tmp_path / "ck")
+    cfg, opt, data, tcfg = _setup(steps=15, ckpt_dir=d, failure_at=12)
+    metrics = []
+    state = TR.train_with_restart(
+        cfg, opt, data, tcfg, make_host_mesh, metrics_out=metrics
+    )
+    assert state.step == 15
+    # restart resumed from the step-10 checkpoint: steps 11,12 appear twice
+    steps = [m["step"] for m in metrics]
+    assert steps.count(11) == 2
+
+
+def test_straggler_flag_present():
+    cfg, opt, data, tcfg = _setup(steps=3)
+    metrics = []
+    TR.train(cfg, opt, data, tcfg, make_host_mesh(), metrics_out=metrics)
+    assert all("straggler" in m for m in metrics)
+
+
+def test_compressed_training_still_learns():
+    """CSR top-k gradient compression (density 5%) with error feedback:
+    the loss still decreases — the paper's format carrying DP traffic."""
+    cfg, opt, data, tcfg = _setup(steps=30)
+    tcfg = dataclasses.replace(tcfg, compress_density=0.05)
+    metrics = []
+    TR.train(cfg, opt, data, tcfg, make_host_mesh(), metrics_out=metrics)
+    first = np.mean([m["loss"] for m in metrics[:5]])
+    last = np.mean([m["loss"] for m in metrics[-5:]])
+    assert last < first - 0.1, (first, last)
+    assert metrics[0].get("loss") is not None
