@@ -1,0 +1,105 @@
+"""Format auto-selection benchmark: ``prepare(format="auto")`` vs forced.
+
+Runs the regular Table-2 suite *plus* synthetic irregular matrices
+(power-law degree distributions, the SELL-C-σ target workload) through three
+configurations — auto, forced CSR-k, forced SELL-C-σ — and reports per-matrix
+stats (nnz/row variance, the routing signal), which backend auto picked,
+wall time of each path's jnp computation, and storage/padding overheads.
+
+The question the table answers: does the O(1) selector pick the backend that
+is actually fastest/leanest on each matrix class?  (Paper Sec. 6 says CSR-k
+on regular; Kreutzer et al. say SELL-C-σ on irregular; the registry encodes
+exactly that boundary at nnz/row variance = 10.)
+
+NOTE on timing: as in benchmarks/formats.py, ``interpret=True`` Pallas wall
+time is not meaningful, so each backend is timed via its jnp oracle
+(identical arithmetic and memory layout to the kernel).
+
+Usage: PYTHONPATH=src python benchmarks/format_select.py [scale]
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, gflops, relative_performance, time_fn
+from repro.configs.spmv_suite import SUITE
+from repro.core.spmv import prepare
+from repro.kernels import ref
+
+
+def powerlaw(m: int, scale: float = 4.0, seed: int = 0):
+    """Power-law nnz/row matrix (CSR) — the canonical irregular workload."""
+    from repro.sparse import COOMatrix, csr_from_coo
+
+    rng = np.random.default_rng(seed)
+    lengths = np.minimum((rng.pareto(1.0, m) * scale + 1).astype(int), m)
+    rows = np.repeat(np.arange(m), lengths)
+    cols = np.concatenate([rng.choice(m, size=L, replace=False) for L in lengths])
+    vals = rng.standard_normal(len(rows)).astype(np.float32)
+    return csr_from_coo(COOMatrix(
+        jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32),
+        jnp.asarray(vals), (m, m),
+    ))
+
+
+def _time_backend(op, x):
+    """Time the jnp computation equivalent to the op's kernel path."""
+    if op.backend == "sellcs":
+        sell = op.sell
+        return time_fn(lambda v: ref.spmv_sellcs(sell, v), x)
+    xr = x[jnp.asarray(op.perm)]
+    tiles = op.tiles
+    return time_fn(lambda v: ref.spmv_csrk_tiles(tiles, v), xr)
+
+
+def run(scale: int = 1024) -> list:
+    cases = [(e.name, e.build(scale)) for e in SUITE]
+    m_irr = max(1024, 2_000_000 // scale)
+    cases += [
+        (f"powerlaw-{m_irr}", powerlaw(m_irr, scale=4.0, seed=1)),
+        (f"powerlaw-heavy-{m_irr}", powerlaw(m_irr, scale=12.0, seed=2)),
+    ]
+
+    rows = []
+    for name, A in cases:
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(A.n), jnp.float32)
+        auto = prepare(A, device="tpu_v5e", format="auto")
+        t_auto = _time_backend(auto, x)
+        t_forced = {}
+        for forced in ("csrk", "sellcs"):
+            if forced == auto.backend:
+                t_forced[forced] = t_auto
+            else:
+                t_forced[forced] = _time_backend(
+                    prepare(A, device="tpu_v5e", format=forced), x
+                )
+        best = min(t_forced, key=t_forced.get)
+        rows.append({
+            "matrix": name,
+            "n": A.m,
+            "nnz": A.nnz,
+            "row_var": round(auto.stats.row_var, 2),
+            "picked": auto.backend,
+            "best": best,
+            "picked_is_best": auto.backend == best,
+            "t_csrk_us": round(t_forced["csrk"] * 1e6, 1),
+            "t_sellcs_us": round(t_forced["sellcs"] * 1e6, 1),
+            "gflops_auto": round(gflops(A.nnz, t_auto), 3),
+            "rel_vs_other_pct": round(relative_performance(
+                t_forced["sellcs" if auto.backend == "csrk" else "csrk"], t_auto
+            ), 1),
+            "pad_overhead": round(auto.padding_overhead(), 3),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    scale = int(sys.argv[1]) if len(sys.argv) > 1 else 1024
+    emit(run(scale), [
+        "matrix", "n", "nnz", "row_var", "picked", "best", "picked_is_best",
+        "t_csrk_us", "t_sellcs_us", "gflops_auto", "rel_vs_other_pct",
+        "pad_overhead",
+    ])

@@ -85,7 +85,7 @@ def all_steps(directory: str):
         if name.startswith("step_") and not name.endswith(".tmp"):
             if os.path.exists(os.path.join(directory, name, "manifest.json")):
                 out.append(int(name.split("_")[1]))
-    return out
+    return sorted(out)
 
 
 def latest_step(directory: str) -> Optional[int]:

@@ -1,16 +1,23 @@
 """CSR-k heterogeneous SpMV — the paper's contribution as a composable module."""
-from repro.core.formats import (  # noqa: F401
+from repro.sparse import (  # noqa: F401
     BCSRMatrix,
     COOMatrix,
     CSRMatrix,
     CSRkMatrix,
     CSRkTiles,
     ELLMatrix,
+    MatrixStats,
+    SELLCSMatrix,
+    SELLCSTiles,
     bcsr_from_csr,
     build_csrk,
+    compute_stats,
     csr_from_coo,
     ell_from_csr,
+    select_format,
+    sellcs_from_csr,
     tiles_from_csrk,
+    tiles_from_sellcs,
 )
 from repro.core.ordering import bandk, bandwidth, rcm  # noqa: F401
 from repro.core.tuner import TuningParams, tune, fit_log_model  # noqa: F401

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 
 from repro.core.formats import CSRMatrix
 from repro.kernels import ref as kref
@@ -105,7 +105,7 @@ def dist_spmv_allgather(A: ShardedCSR, x: jax.Array, mesh: Mesh, axis: str = "da
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis)),
         out_specs=P(axis),
-        check_vma=False,
+        check_rep=False,
     )
     y = f(A.row_ptr, A.col_idx, A.vals, xpad)
     return y[: A.shape[0]]
@@ -142,7 +142,7 @@ def dist_spmv_halo(A: ShardedCSR, x: jax.Array, mesh: Mesh, axis: str = "data"):
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis)),
         out_specs=P(axis),
-        check_vma=False,
+        check_rep=False,
     )
     y = f(A.row_ptr, A.col_idx, A.vals, xpad)
     return y[: A.shape[0]]

@@ -1,697 +1,33 @@
-"""Sparse-matrix containers: COO, CSR and the paper's CSR-k.
+"""Back-compat shim — the format containers now live in :mod:`repro.sparse`.
 
-CSR-k (Lane & Booth 2022) stores a sparse matrix as plain CSR plus k-1 extra
-pointer arrays that group contiguous rows into super-rows (``sr_ptr``) and
-contiguous super-rows into super-super-rows (``ssr_ptr``).  The base CSR arrays
-are untouched, so any CSR consumer can read a CSR-k matrix directly — that is
-the paper's heterogeneity argument and we preserve it here: ``CSRkMatrix.csr``
-is a zero-copy view.
+The original 697-line monolith was split into a package:
 
-The TPU execution path additionally materialises a *padded tile view*
-(:class:`CSRkTiles`) in which every super-super-row owns a fixed number of rows
-and a fixed number of nnz slots so a Pallas ``BlockSpec`` can move one SSR per
-grid step.  The tile view is derived, never stored as the source of truth.
+* ``repro.sparse.coo`` / ``repro.sparse.csr``   — COO, CSR
+* ``repro.sparse.csrk``                          — CSR-k + TPU tile view
+* ``repro.sparse.sellcs``                        — SELL-C-σ (irregular path)
+* ``repro.sparse.baselines``                     — ELL, BCSR, CSR5-like
+* ``repro.sparse.stats`` / ``repro.sparse.registry`` — stats + auto-selection
 
-All containers are registered as pytrees so they can cross ``jax.jit``
-boundaries; structural metadata (shapes, tile geometry) rides in the static
-aux data.
+Every public name keeps importing from here; new code should import from
+``repro.sparse`` directly.
 """
-from __future__ import annotations
-
-import dataclasses
-from functools import partial
-from typing import Any, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-Array = Any
-
-_INT = jnp.int32
-
-
-# ---------------------------------------------------------------------------
-# COO
-# ---------------------------------------------------------------------------
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class COOMatrix:
-    """Coordinate-list matrix (paper Sec. 2.1)."""
-
-    row_idx: Array  # [nnz] int32
-    col_idx: Array  # [nnz] int32
-    vals: Array     # [nnz] float
-    shape: Tuple[int, int]
-
-    # -- pytree protocol ----------------------------------------------------
-    def tree_flatten(self):
-        return (self.row_idx, self.col_idx, self.vals), (self.shape,)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        row_idx, col_idx, vals = children
-        return cls(row_idx, col_idx, vals, aux[0])
-
-    # -- basics -------------------------------------------------------------
-    @property
-    def nnz(self) -> int:
-        return int(self.vals.shape[0])
-
-    @property
-    def dtype(self):
-        return self.vals.dtype
-
-    def todense(self) -> Array:
-        out = jnp.zeros(self.shape, self.vals.dtype)
-        return out.at[self.row_idx, self.col_idx].add(self.vals)
-
-    def tocsr(self) -> "CSRMatrix":
-        return csr_from_coo(self)
-
-    @classmethod
-    def fromdense(cls, dense: Array) -> "COOMatrix":
-        dense = np.asarray(dense)
-        r, c = np.nonzero(dense)
-        return cls(
-            jnp.asarray(r, _INT),
-            jnp.asarray(c, _INT),
-            jnp.asarray(dense[r, c]),
-            dense.shape,
-        )
-
-
-# ---------------------------------------------------------------------------
-# CSR
-# ---------------------------------------------------------------------------
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class CSRMatrix:
-    """Compressed sparse row matrix (paper Sec. 2.1, Fig. 2 black arrays)."""
-
-    row_ptr: Array  # [m+1] int32, cumulative nnz
-    col_idx: Array  # [nnz] int32
-    vals: Array     # [nnz] float
-    shape: Tuple[int, int]
-
-    def tree_flatten(self):
-        return (self.row_ptr, self.col_idx, self.vals), (self.shape,)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        row_ptr, col_idx, vals = children
-        return cls(row_ptr, col_idx, vals, aux[0])
-
-    @property
-    def nnz(self) -> int:
-        return int(self.vals.shape[0])
-
-    @property
-    def m(self) -> int:
-        return self.shape[0]
-
-    @property
-    def n(self) -> int:
-        return self.shape[1]
-
-    @property
-    def dtype(self):
-        return self.vals.dtype
-
-    @property
-    def rdensity(self) -> float:
-        """Mean row density NNZ/N — the tuning model's sole input (paper Sec. 4)."""
-        return self.nnz / max(self.m, 1)
-
-    def row_lengths(self) -> Array:
-        return self.row_ptr[1:] - self.row_ptr[:-1]
-
-    def todense(self) -> Array:
-        rows = jnp.repeat(
-            jnp.arange(self.m, dtype=_INT),
-            self.row_lengths(),
-            total_repeat_length=self.nnz,
-        )
-        out = jnp.zeros(self.shape, self.vals.dtype)
-        return out.at[rows, self.col_idx].add(self.vals)
-
-    def tocoo(self) -> COOMatrix:
-        rows = jnp.repeat(
-            jnp.arange(self.m, dtype=_INT),
-            self.row_lengths(),
-            total_repeat_length=self.nnz,
-        )
-        return COOMatrix(rows, self.col_idx, self.vals, self.shape)
-
-    @classmethod
-    def fromdense(cls, dense: Array) -> "CSRMatrix":
-        return COOMatrix.fromdense(dense).tocsr()
-
-    def permute_rows(self, perm: np.ndarray) -> "CSRMatrix":
-        """Return PA for a row permutation ``perm`` (new row i = old row perm[i])."""
-        perm = np.asarray(perm)
-        rp = np.asarray(self.row_ptr)
-        ci = np.asarray(self.col_idx)
-        vl = np.asarray(self.vals)
-        lengths = (rp[1:] - rp[:-1])[perm]
-        new_rp = np.zeros(self.m + 1, np.int32)
-        np.cumsum(lengths, out=new_rp[1:])
-        new_ci = np.empty_like(ci)
-        new_vl = np.empty_like(vl)
-        for i, p in enumerate(perm):
-            s, e = rp[p], rp[p + 1]
-            ns = new_rp[i]
-            new_ci[ns : ns + (e - s)] = ci[s:e]
-            new_vl[ns : ns + (e - s)] = vl[s:e]
-        return CSRMatrix(
-            jnp.asarray(new_rp), jnp.asarray(new_ci), jnp.asarray(new_vl), self.shape
-        )
-
-    def permute_cols(self, perm: np.ndarray) -> "CSRMatrix":
-        """Return A P^T: new column j corresponds to old column perm[j]."""
-        perm = np.asarray(perm)
-        inv = np.empty_like(perm)
-        inv[perm] = np.arange(perm.size)
-        new_ci = inv[np.asarray(self.col_idx)]
-        # keep rows sorted by column for band-window friendliness
-        rp = np.asarray(self.row_ptr)
-        vl = np.asarray(self.vals)
-        out_ci = np.empty_like(new_ci)
-        out_vl = np.empty_like(vl)
-        for i in range(self.m):
-            s, e = rp[i], rp[i + 1]
-            order = np.argsort(new_ci[s:e], kind="stable")
-            out_ci[s:e] = new_ci[s:e][order]
-            out_vl[s:e] = vl[s:e][order]
-        return CSRMatrix(self.row_ptr, jnp.asarray(out_ci), jnp.asarray(out_vl), self.shape)
-
-    def symmetric_permute(self, perm: np.ndarray) -> "CSRMatrix":
-        """P A P^T — what a reordering like RCM/Band-k applies."""
-        return self.permute_rows(perm).permute_cols(perm)
-
-
-def csr_from_coo(coo: COOMatrix) -> CSRMatrix:
-    """Sort-based COO→CSR conversion (host-side numpy: setup phase)."""
-    m, n = coo.shape
-    r = np.asarray(coo.row_idx)
-    c = np.asarray(coo.col_idx)
-    v = np.asarray(coo.vals)
-    order = np.lexsort((c, r))
-    r, c, v = r[order], c[order], v[order]
-    row_ptr = np.zeros(m + 1, np.int32)
-    np.add.at(row_ptr, r + 1, 1)
-    np.cumsum(row_ptr, out=row_ptr)
-    return CSRMatrix(jnp.asarray(row_ptr), jnp.asarray(c, _INT), jnp.asarray(v), (m, n))
-
-
-# ---------------------------------------------------------------------------
-# CSR-k
-# ---------------------------------------------------------------------------
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class CSRkMatrix:
-    """CSR-k: CSR + super-row / super-super-row pointer arrays (paper Fig. 2).
-
-    ``k == 2`` → only ``sr_ptr`` is meaningful (``ssr_ptr`` groups all SRs into
-    one trivial SSR); ``k == 3`` → both levels are real. This mirrors the
-    paper's CSR-2-on-CPU / CSR-3-on-GPU split.
-    """
-
-    row_ptr: Array   # [m+1]   cumulative nnz per row
-    col_idx: Array   # [nnz]
-    vals: Array      # [nnz]
-    sr_ptr: Array    # [num_sr+1]  cumulative rows per super-row
-    ssr_ptr: Array   # [num_ssr+1] cumulative super-rows per super-super-row
-    shape: Tuple[int, int]
-    k: int = 3
-
-    def tree_flatten(self):
-        return (
-            (self.row_ptr, self.col_idx, self.vals, self.sr_ptr, self.ssr_ptr),
-            (self.shape, self.k),
-        )
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children, shape=aux[0], k=aux[1])
-
-    # -- the heterogeneity property: CSR view is zero-copy -------------------
-    @property
-    def csr(self) -> CSRMatrix:
-        return CSRMatrix(self.row_ptr, self.col_idx, self.vals, self.shape)
-
-    @property
-    def nnz(self) -> int:
-        return int(self.vals.shape[0])
-
-    @property
-    def m(self) -> int:
-        return self.shape[0]
-
-    @property
-    def n(self) -> int:
-        return self.shape[1]
-
-    @property
-    def num_sr(self) -> int:
-        return int(self.sr_ptr.shape[0]) - 1
-
-    @property
-    def num_ssr(self) -> int:
-        return int(self.ssr_ptr.shape[0]) - 1
-
-    @property
-    def rdensity(self) -> float:
-        return self.nnz / max(self.m, 1)
-
-    def todense(self) -> Array:
-        return self.csr.todense()
-
-    def overhead_bytes(self) -> int:
-        """Extra bytes over plain CSR (the paper's Fig. 12 quantity)."""
-        extra = self.sr_ptr.size
-        if self.k >= 3:
-            extra += self.ssr_ptr.size
-        return int(extra) * 4
-
-    def overhead_fraction(self) -> float:
-        base = (2 * self.nnz + self.m + 1) * 4
-        return self.overhead_bytes() / base
-
-    def validate(self) -> None:
-        sr = np.asarray(self.sr_ptr)
-        ssr = np.asarray(self.ssr_ptr)
-        rp = np.asarray(self.row_ptr)
-        assert sr[0] == 0 and sr[-1] == self.m, "sr_ptr must cover all rows"
-        assert ssr[0] == 0 and ssr[-1] == self.num_sr, "ssr_ptr must cover all SRs"
-        assert np.all(np.diff(sr) > 0), "super-rows must be non-empty"
-        assert np.all(np.diff(ssr) > 0), "super-super-rows must be non-empty"
-        assert rp[-1] == self.nnz
-
-
-def build_csrk(
-    csr: CSRMatrix,
-    srs: int,
-    ssrs: int | None = None,
-    k: int = 3,
-) -> CSRkMatrix:
-    """Group rows into super-rows of ~``srs`` rows and SRs into SSRs of ~``ssrs``
-    super-rows.  Sizes follow the tuner; groups are contiguous (paper Fig. 2).
-    """
-    m = csr.m
-    srs = max(int(srs), 1)
-    num_sr = (m + srs - 1) // srs
-    sr_ptr = np.minimum(np.arange(num_sr + 1, dtype=np.int64) * srs, m).astype(np.int32)
-    if k >= 3:
-        ssrs = max(int(ssrs or 1), 1)
-        num_ssr = (num_sr + ssrs - 1) // ssrs
-        ssr_ptr = np.minimum(
-            np.arange(num_ssr + 1, dtype=np.int64) * ssrs, num_sr
-        ).astype(np.int32)
-    else:
-        ssr_ptr = np.asarray([0, num_sr], np.int32)
-    return CSRkMatrix(
-        csr.row_ptr,
-        csr.col_idx,
-        csr.vals,
-        jnp.asarray(sr_ptr),
-        jnp.asarray(ssr_ptr),
-        csr.shape,
-        k=k,
-    )
-
-
-# ---------------------------------------------------------------------------
-# ELL (GPU-heritage baseline, paper Sec. 2.3)
-# ---------------------------------------------------------------------------
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class ELLMatrix:
-    """ELLPACK: two m×k dense matrices, rows padded to the densest row."""
-
-    col_idx: Array  # [m, kmax] int32, padded with 0
-    vals: Array     # [m, kmax], padded with 0.0
-    shape: Tuple[int, int]
-
-    def tree_flatten(self):
-        return (self.col_idx, self.vals), (self.shape,)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children, shape=aux[0])
-
-    @property
-    def kmax(self) -> int:
-        return int(self.vals.shape[1])
-
-    def padding_overhead(self) -> float:
-        nnz = float(np.count_nonzero(np.asarray(self.vals)))
-        slots = float(self.vals.size)
-        return (slots - nnz) / max(nnz, 1.0)
-
-    def todense(self) -> Array:
-        m, n = self.shape
-        rows = jnp.broadcast_to(jnp.arange(m, dtype=_INT)[:, None], self.vals.shape)
-        out = jnp.zeros((m, n), self.vals.dtype)
-        return out.at[rows, self.col_idx].add(self.vals)
-
-
-def ell_from_csr(csr: CSRMatrix, kmax: int | None = None) -> ELLMatrix:
-    rp = np.asarray(csr.row_ptr)
-    ci = np.asarray(csr.col_idx)
-    vl = np.asarray(csr.vals)
-    lengths = rp[1:] - rp[:-1]
-    kmax = int(kmax or lengths.max(initial=1))
-    m = csr.m
-    out_ci = np.zeros((m, kmax), np.int32)
-    out_vl = np.zeros((m, kmax), vl.dtype)
-    for i in range(m):
-        s, e = rp[i], min(rp[i + 1], rp[i] + kmax)
-        out_ci[i, : e - s] = ci[s:e]
-        out_vl[i, : e - s] = vl[s:e]
-    return ELLMatrix(jnp.asarray(out_ci), jnp.asarray(out_vl), csr.shape)
-
-
-# ---------------------------------------------------------------------------
-# BCSR (blocked baseline, paper Sec. 2.1)
-# ---------------------------------------------------------------------------
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class BCSRMatrix:
-    """Block CSR with bR×bC dense blocks."""
-
-    block_row_ptr: Array  # [mb+1]
-    block_col_idx: Array  # [nblocks]
-    blocks: Array         # [nblocks, bR, bC]
-    shape: Tuple[int, int]
-
-    def tree_flatten(self):
-        return (self.block_row_ptr, self.block_col_idx, self.blocks), (self.shape,)
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children, shape=aux[0])
-
-    @property
-    def block_shape(self) -> Tuple[int, int]:
-        return (int(self.blocks.shape[1]), int(self.blocks.shape[2]))
-
-    def todense(self) -> Array:
-        bR, bC = self.block_shape
-        mb = int(self.block_row_ptr.shape[0]) - 1
-        nb = self.shape[1] // bC
-        lengths = self.block_row_ptr[1:] - self.block_row_ptr[:-1]
-        brow = jnp.repeat(
-            jnp.arange(mb, dtype=_INT), lengths, total_repeat_length=self.blocks.shape[0]
-        )
-        dense = jnp.zeros((mb, nb, bR, bC), self.blocks.dtype)
-        dense = dense.at[brow, self.block_col_idx].add(self.blocks)
-        return dense.transpose(0, 2, 1, 3).reshape(self.shape)
-
-
-def bcsr_from_csr(csr: CSRMatrix, br: int = 8, bc: int = 8) -> BCSRMatrix:
-    m, n = csr.shape
-    mp, np_ = -(-m // br) * br, -(-n // bc) * bc
-    dense = np.zeros((mp, np_), dtype=np.asarray(csr.vals).dtype)
-    dense[:m, :n] = np.asarray(csr.todense())
-    mb, nb = mp // br, np_ // bc
-    blocked = dense.reshape(mb, br, nb, bc).transpose(0, 2, 1, 3)
-    mask = blocked.reshape(mb, nb, -1).any(axis=-1)
-    rows, cols = np.nonzero(mask)
-    block_row_ptr = np.zeros(mb + 1, np.int32)
-    np.add.at(block_row_ptr, rows + 1, 1)
-    np.cumsum(block_row_ptr, out=block_row_ptr)
-    return BCSRMatrix(
-        jnp.asarray(block_row_ptr),
-        jnp.asarray(cols, _INT),
-        jnp.asarray(blocked[rows, cols]),
-        (mp, np_),
-    )
-
-
-# ---------------------------------------------------------------------------
-# CSR-k padded tile view for the TPU kernel
-# ---------------------------------------------------------------------------
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class CSRkTiles:
-    """Padded per-SSR tile view of a CSR-k matrix (TPU adaptation, DESIGN §2).
-
-    Each SSR (one Pallas grid step) owns:
-      * ``rows_per_tile`` contiguous output rows (uniform; last tile padded),
-      * ``slots`` nnz slots (padded to the max SSR nnz, rounded up to 128),
-      * a contiguous x-window of ``2·window`` columns starting at block
-        ``win_block`` (element offset ``win_block · window``).
-
-    The window is addressed as *two adjacent blocks* of width ``window`` so a
-    ``BlockSpec`` index map (which works in block units) can place it: the
-    SSR's minimum column ``lo`` gives ``win_block = lo // window`` and, since
-    Band-k bounds the SSR column span to ≤ ``window``, every in-band column
-    satisfies ``0 ≤ col − win_block·window < 2·window``.
-
-    ``local_col`` indexes within the 2-block window; ``local_row`` within the
-    tile's rows. Padding slots carry ``vals == 0`` and index 0 so they are
-    numerically inert. Entries outside the window are diverted to a COO
-    remainder (empty after Band-k on all suites).
-    """
-
-    vals: Array        # [T, slots]
-    local_col: Array   # [T, slots] int32, in [0, 2*window)
-    local_row: Array   # [T, slots] int32, in [0, rows_per_tile)
-    win_block: Array   # [T] int32, x-window block index (elements = blk*window)
-    # COO remainder for out-of-window entries
-    rem_row: Array     # [R] int32
-    rem_col: Array     # [R] int32
-    rem_val: Array     # [R]
-    shape: Tuple[int, int]
-    rows_per_tile: int
-    window: int
-
-    def tree_flatten(self):
-        return (
-            (self.vals, self.local_col, self.local_row, self.win_block,
-             self.rem_row, self.rem_col, self.rem_val),
-            (self.shape, self.rows_per_tile, self.window),
-        )
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children, shape=aux[0], rows_per_tile=aux[1], window=aux[2])
-
-    @property
-    def num_tiles(self) -> int:
-        return int(self.vals.shape[0])
-
-    @property
-    def slots(self) -> int:
-        return int(self.vals.shape[1])
-
-    @property
-    def remainder_nnz(self) -> int:
-        return int(self.rem_val.shape[0])
-
-    def padding_overhead(self) -> float:
-        """Padded-slot fraction: the tile view's memory-waste metric."""
-        real = float(np.count_nonzero(np.asarray(self.vals))) + self.remainder_nnz
-        return (self.num_tiles * self.slots + self.remainder_nnz - real) / max(real, 1.0)
-
-
-def _round_up(x: int, mult: int) -> int:
-    return -(-x // mult) * mult
-
-
-def tiles_from_csrk(mat: CSRkMatrix, window: int | None = None) -> CSRkTiles:
-    """Materialise the padded per-SSR tile view (host-side setup, numpy).
-
-    ``window`` is the x-window *block* width in columns (rounded up to 128).
-    If None it is chosen as the max SSR column span rounded up — i.e. Band-k
-    decides it (DESIGN §2: banding makes the window contiguous and small).
-    """
-    rp = np.asarray(mat.row_ptr)
-    ci = np.asarray(mat.col_idx)
-    vl = np.asarray(mat.vals)
-    sr = np.asarray(mat.sr_ptr)
-    ssr = np.asarray(mat.ssr_ptr)
-    m, n = mat.shape
-
-    # rows covered by each SSR. The kernel's y BlockSpec needs a uniform row
-    # stride per grid step, so SSRs must be uniform (build_csrk guarantees it;
-    # Band-k hierarchies are regularised before reaching the kernel path).
-    ssr_row_start = sr[ssr[:-1]]
-    ssr_row_end = sr[ssr[1:]]
-    T = len(ssr_row_start)
-    rows_per_tile = int((ssr_row_end - ssr_row_start).max(initial=1))
-    if not np.all(ssr_row_start == np.arange(T) * rows_per_tile):
-        raise ValueError(
-            "tiles_from_csrk requires uniform SSR row counts "
-            "(use build_csrk / regularised hierarchy for the TPU kernel path)"
-        )
-
-    # column span per SSR → window block size (Band-k bounds this)
-    spans = []
-    for t in range(T):
-        s, e = rp[ssr_row_start[t]], rp[ssr_row_end[t]]
-        if e > s:
-            spans.append(int(ci[s:e].max()) - int(ci[s:e].min()) + 1)
-        else:
-            spans.append(1)
-    if window is None:
-        window = _round_up(max(spans), 128)
-    else:
-        window = _round_up(int(window), 128)
-
-    max_nnz = 0
-    for t in range(T):
-        max_nnz = max(max_nnz, int(rp[ssr_row_end[t]] - rp[ssr_row_start[t]]))
-    slots = _round_up(max(max_nnz, 1), 128)
-
-    tvals = np.zeros((T, slots), vl.dtype)
-    tlc = np.zeros((T, slots), np.int32)
-    tlr = np.zeros((T, slots), np.int32)
-    twin = np.zeros((T,), np.int32)
-    rem_r, rem_c, rem_v = [], [], []
-
-    for t in range(T):
-        r0, r1 = int(ssr_row_start[t]), int(ssr_row_end[t])
-        s, e = int(rp[r0]), int(rp[r1])
-        if e == s:
-            continue
-        cols = ci[s:e]
-        vals = vl[s:e]
-        rows = np.repeat(np.arange(r0, r1), rp[r0 + 1 : r1 + 1] - rp[r0:r1])
-        blk = int(cols.min()) // window
-        twin[t] = blk
-        start = blk * window
-        inw = (cols >= start) & (cols < start + 2 * window)
-        k = int(inw.sum())
-        tvals[t, :k] = vals[inw]
-        tlc[t, :k] = cols[inw] - start
-        tlr[t, :k] = rows[inw] - r0
-        if k < len(cols):
-            out = ~inw
-            rem_r.append(rows[out])
-            rem_c.append(cols[out])
-            rem_v.append(vals[out])
-
-    if rem_r:
-        rem_r = np.concatenate(rem_r)
-        rem_c = np.concatenate(rem_c)
-        rem_v = np.concatenate(rem_v)
-    else:
-        rem_r = np.zeros((0,), np.int32)
-        rem_c = np.zeros((0,), np.int32)
-        rem_v = np.zeros((0,), vl.dtype)
-
-    return CSRkTiles(
-        jnp.asarray(tvals),
-        jnp.asarray(tlc),
-        jnp.asarray(tlr),
-        jnp.asarray(twin, _INT),
-        jnp.asarray(rem_r, _INT),
-        jnp.asarray(rem_c, _INT),
-        jnp.asarray(rem_v),
-        (m, n),
-        rows_per_tile,
-        window,
-    )
-
-
-# ---------------------------------------------------------------------------
-# CSR5-like sigma-tile format (the paper's main competitor, Sec. 2.4)
-# ---------------------------------------------------------------------------
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class CSR5LikeMatrix:
-    """Simplified CSR5 (Liu & Vinter 2015): nonzeros regrouped into σ×ω tiles
-    with a tile pointer and a per-nnz row-start bit flag.
-
-    Kept as the in-repo stand-in for the paper's CSR5 comparison: it carries
-    the same *kind* of metadata CSR5 needs (tile_ptr + tile descriptor
-    bit-flags), so the storage-overhead comparison vs CSR-k (paper Sec. 8)
-    is measurable, and its SpMV is executable (segmented sum with rows
-    reconstructed from the bit flags). The paper's point — CSR5 needs
-    bit-level formats and tile descriptors where CSR-k needs two pointer
-    arrays — is visible directly in this container's fields.
-    """
-
-    vals: Array        # [nnz_padded]
-    col_idx: Array     # [nnz_padded]
-    row_flag: Array    # [nnz_padded] bool — True at each row's first nnz
-    tile_ptr: Array    # [T+1] int32 — first row index of each tile
-    nonempty_rows: Array  # [R] int32 — compacted→actual row ids (empty-row
-                          # support; real CSR5 derives this from tile
-                          # descriptors, so it is excluded from the paper's
-                          # overhead accounting below)
-    shape: Tuple[int, int]
-    sigma: int
-    omega: int
-    nnz_real: int
-
-    def tree_flatten(self):
-        return (
-            (self.vals, self.col_idx, self.row_flag, self.tile_ptr,
-             self.nonempty_rows),
-            (self.shape, self.sigma, self.omega, self.nnz_real),
-        )
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children, shape=aux[0], sigma=aux[1], omega=aux[2],
-                   nnz_real=aux[3])
-
-    @property
-    def tile_size(self) -> int:
-        return self.sigma * self.omega
-
-    def overhead_bytes(self) -> int:
-        """Extra bytes over plain CSR: tile_ptr + packed bit flags.
-
-        (CSR5 drops row_ptr in favour of these; we charge both replaced and
-        added structures the way the paper's Sec. 8 accounting does: extra =
-        tile metadata, since the base arrays still serve CSR consumers.)
-        """
-        return int(self.tile_ptr.size) * 4 + (int(self.row_flag.size) + 7) // 8
-
-    def overhead_fraction(self) -> float:
-        base = (2 * self.nnz_real + self.shape[0] + 1) * 4
-        return self.overhead_bytes() / base
-
-
-def csr5_from_csr(csr: CSRMatrix, sigma: int = 16, omega: int = 4) -> CSR5LikeMatrix:
-    rp = np.asarray(csr.row_ptr)
-    ci = np.asarray(csr.col_idx)
-    vl = np.asarray(csr.vals)
-    nnz = csr.nnz
-    tile = sigma * omega
-    nnz_pad = -(-max(nnz, 1) // tile) * tile
-    vals = np.zeros(nnz_pad, vl.dtype)
-    cols = np.zeros(nnz_pad, np.int32)
-    flag = np.zeros(nnz_pad, bool)
-    vals[:nnz] = vl
-    cols[:nnz] = ci
-    flag[rp[:-1][np.diff(rp) > 0]] = True          # first nnz of each non-empty row
-    T = nnz_pad // tile
-    # first row of each tile = row containing the tile's first nnz
-    rows_of_nnz = np.searchsorted(rp, np.arange(0, nnz_pad, tile), side="right") - 1
-    tile_ptr = np.concatenate([rows_of_nnz, [csr.m]]).astype(np.int32)
-    nonempty = np.nonzero(np.diff(rp) > 0)[0].astype(np.int32)
-    if len(nonempty) == 0:
-        nonempty = np.zeros(1, np.int32)
-    return CSR5LikeMatrix(
-        jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(flag),
-        jnp.asarray(tile_ptr), jnp.asarray(nonempty), csr.shape, sigma, omega, nnz,
-    )
+from repro.sparse import (  # noqa: F401
+    BCSRMatrix,
+    COOMatrix,
+    CSR5LikeMatrix,
+    CSRMatrix,
+    CSRkMatrix,
+    CSRkTiles,
+    ELLMatrix,
+    SELLCSMatrix,
+    SELLCSTiles,
+    bcsr_from_csr,
+    build_csrk,
+    csr5_from_csr,
+    csr_from_coo,
+    ell_from_csr,
+    sellcs_from_csr,
+    tiles_from_csrk,
+    tiles_from_sellcs,
+)
+from repro.sparse.csrk import _round_up  # noqa: F401  (legacy internal import)

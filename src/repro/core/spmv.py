@@ -1,16 +1,23 @@
 """Format-dispatching SpMV public API — the paper's contribution as a module.
 
-``prepare(A)`` runs the paper's full setup pipeline:
+``prepare(A)`` runs the full setup pipeline and returns a
+:class:`PreparedSpMV` whose ``__call__`` is a jit-compatible SpMV.
+
+For the paper's CSR-k path (regular matrices):
   Band-k reorder → constant-time tune (SSRS/SRS from rdensity) → CSR-k build
-  → (TPU path) padded tile view,
-and returns a :class:`PreparedSpMV` whose ``__call__`` is a jit-compatible
-SpMV.  The canonical CSR-k arrays stay CSR-compatible throughout (the
-heterogeneity property); the device decides only the *interpretation*.
+  → (TPU path) padded tile view.
+The canonical CSR-k arrays stay CSR-compatible throughout (the heterogeneity
+property); the device decides only the *interpretation*.
+
+``format="auto"`` additionally runs the registry's O(1) selector
+(:func:`repro.sparse.select_format`) over one-pass matrix statistics: regular
+matrices (nnz/row variance ≤ 10, paper Sec. 6) keep the CSR-k path
+bit-for-bit, irregular ones route to SELL-C-σ (Kreutzer et al.).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,12 +25,19 @@ import numpy as np
 
 import repro.core.ordering as bandk_mod
 import repro.core.tuner as tuner_mod
-from repro.core.formats import (
+from repro.sparse import (
     CSRMatrix,
     CSRkMatrix,
     CSRkTiles,
+    MatrixStats,
+    SELLCSMatrix,
+    SELLCSTiles,
     build_csrk,
+    compute_stats,
+    select_format,
+    sellcs_from_csr,
     tiles_from_csrk,
+    tiles_from_sellcs,
 )
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -33,25 +47,42 @@ from repro.kernels import ref as kref
 class PreparedSpMV:
     """A tuned, reordered, device-ready SpMV operator y = A x.
 
+    ``backend`` records which registered format won the dispatch ("csrk" or
+    "sellcs"); ``stats`` holds the one-pass summary that drove the decision
+    (None when the format was forced and stats were not needed).
+
     ``perm`` maps new index → old index (A was symmetrically permuted), so for
     callers living in the original index space:
         y_old[perm] == P A P^T (x_old[perm])  ⇒  use ``apply_original``.
+    The SELL-C-σ path never permutes A (its σ-sort is internal to the
+    container), so there ``perm`` is the identity.
     """
 
-    csrk: CSRkMatrix
+    csrk: Optional[CSRkMatrix]
     tiles: Optional[CSRkTiles]
     perm: np.ndarray
     params: tuner_mod.TuningParams
     device: str
     gather_mode: str = "onehot"
     interpret: bool = True
+    backend: str = "csrk"
+    sell: Optional[SELLCSMatrix] = None
+    sell_tiles: Optional[SELLCSTiles] = None
+    stats: Optional[MatrixStats] = None
 
     @property
     def csr(self) -> CSRMatrix:
+        if self.csrk is None:
+            raise AttributeError("no CSR view: this operator uses the SELL-C-σ backend")
         return self.csrk.csr
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """SpMV in the *reordered* index space."""
+        if self.backend == "sellcs":
+            return kops.spmv_sellcs(
+                self.sell_tiles, x, gather_mode=self.gather_mode,
+                interpret=self.interpret,
+            )
         if self.tiles is not None:
             return kops.spmv_csrk(
                 self.tiles, x, gather_mode=self.gather_mode, interpret=self.interpret
@@ -69,9 +100,14 @@ class PreparedSpMV:
 
     # -- introspection used by benchmarks ------------------------------------
     def overhead_fraction(self) -> float:
+        if self.backend == "sellcs":
+            base = (2 * self.sell.nnz + self.sell.m + 1) * 4
+            return self.sell.overhead_bytes() / base
         return self.csrk.overhead_fraction()
 
     def padding_overhead(self) -> float:
+        if self.backend == "sellcs":
+            return self.sell.padding_overhead()
         return self.tiles.padding_overhead() if self.tiles is not None else 0.0
 
 
@@ -79,17 +115,63 @@ def prepare(
     A: CSRMatrix,
     device: str = "tpu_v5e",
     *,
+    format: str = "auto",             # "auto" | "csrk" | "sellcs"
     reorder: str = "bandk",           # "bandk" | "rcm" | "natural"
     params: tuner_mod.TuningParams | None = None,
     gather_mode: str = "onehot",
     interpret: bool = True,
     adaptive: bool = False,
+    sell_c: int = 8,
+    sell_sigma: int | None = None,
 ) -> PreparedSpMV:
-    """Full CSR-k setup pipeline (paper Sec. 3–4).
+    """Full heterogeneous SpMV setup pipeline (paper Sec. 3–4 + registry).
+
+    ``format`` selects the storage backend:
+
+    * ``"auto"`` — compute one-pass :class:`~repro.sparse.MatrixStats`
+      (nnz/row mean + variance, rdensity, post-Band-k bandwidth) and dispatch
+      via the registry's O(1) :func:`~repro.sparse.select_format`: matrices
+      with nnz/row variance ≤ 10 (the paper's Sec. 6 regularity bound) take
+      the CSR-k path below, bit-for-bit identical to ``format="csrk"``;
+      irregular matrices take SELL-C-σ.
+    * ``"csrk"`` — force the paper's path: Band-k reorder → constant-time
+      tune from rdensity → CSR-k build → padded tile view (TPU).
+    * ``"sellcs"`` — force SELL-C-σ: σ-window sort → C-row chunks → per-chunk
+      padded slices → uniform-width Pallas view.  No Band-k (the σ-sort is the
+      reordering; ``perm`` stays identity).
+
+    ``sell_c``/``sell_sigma`` tune the SELL-C-σ chunk height and sorting
+    window (defaults: C=8 sublanes, σ=16·C).
 
     ``adaptive=True`` replaces the paper's rdensity-only formula with the
-    variance-aware bytes-model tuner (beyond-paper, EXPERIMENTS §Perf).
+    variance-aware bytes-model tuner (beyond-paper, EXPERIMENTS §Perf);
+    CSR-k path only.
     """
+    stats = None
+    if format == "auto":
+        stats = compute_stats(A)
+        format = select_format(stats, device)
+    if format == "sellcs":
+        sell = sellcs_from_csr(A, C=sell_c, sigma=sell_sigma)
+        sell_tiles = tiles_from_sellcs(sell)
+        return PreparedSpMV(
+            csrk=None,
+            tiles=None,
+            perm=np.arange(A.m),
+            params=tuner_mod.TuningParams(
+                ssrs=1, srs=sell_c, k=1, use_inner_parallel=True
+            ),
+            device=device,
+            gather_mode=gather_mode,
+            interpret=interpret,
+            backend="sellcs",
+            sell=sell,
+            sell_tiles=sell_tiles,
+            stats=stats,
+        )
+    if format != "csrk":
+        raise ValueError(f"unknown format {format!r} (expected auto|csrk|sellcs)")
+
     if reorder == "bandk":
         perm = bandk_mod.bandk(A, k=3)
     elif reorder == "rcm":
@@ -99,6 +181,10 @@ def prepare(
     else:
         raise ValueError(f"unknown reorder {reorder!r}")
     Ar = A.symmetric_permute(perm) if reorder != "natural" else A
+    if stats is not None and reorder != "natural":
+        # report the post-reordering bandwidth (row-length stats are
+        # permutation-invariant, so the routing decision is unaffected)
+        stats = compute_stats(Ar)
 
     if params is None:
         if adaptive and device == "tpu_v5e":
@@ -122,6 +208,8 @@ def prepare(
         device=device,
         gather_mode=gather_mode,
         interpret=interpret,
+        backend="csrk",
+        stats=stats,
     )
 
 

@@ -1,0 +1,46 @@
+"""Shared one-hot gather for the Pallas SpMV kernels.
+
+Both the CSR-k and SELL-C-σ kernels express x[col_idx] as chunked one-hot
+matmuls so the gather runs on the MXU — SpMV is bandwidth-bound, so spending
+idle MXU FLOPs to avoid scattered memory access is the right trade on TPU.
+This module is the single home for that idiom.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pick_chunk(S: int, chunk: int) -> int:
+    """Largest 128-multiple ≤ ``chunk`` that divides ``S``; falls back to S.
+
+    ``S`` (the slot count) is a multiple of 128 by construction in both tile
+    views, so the 128 fallback always divides it; the final ``S`` fallback
+    only triggers for non-aligned S (possible in hand-built tests).
+    """
+    chunk = max(min(chunk, S) // 128 * 128, 128)
+    while chunk > 128 and S % chunk:
+        chunk -= 128
+    return chunk if S % chunk == 0 else S
+
+
+def gather_onehot(src: jax.Array, idx: jax.Array, chunk: int) -> jax.Array:
+    """Gather src[idx] as chunked one-hot matmuls (MXU-friendly).
+
+    src: [N] vector; idx: [S] int32 with S a multiple of 128. Returns [S]
+    float32.  Out-of-range idx rows produce 0 (no matching one-hot column).
+    """
+    (S,) = idx.shape
+    (N,) = src.shape
+    chunk = pick_chunk(S, chunk)
+    num_chunks = S // chunk
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, N), 1)
+
+    def body(i, acc):
+        idx_c = jax.lax.dynamic_slice(idx, (i * chunk,), (chunk,))
+        onehot = (idx_c[:, None] == cols).astype(src.dtype)        # [chunk, N]
+        g = jnp.dot(onehot, src, preferred_element_type=jnp.float32)
+        return jax.lax.dynamic_update_slice(acc, g.astype(acc.dtype), (i * chunk,))
+
+    acc0 = jnp.zeros((S,), jnp.float32)
+    return jax.lax.fori_loop(0, num_chunks, body, acc0)

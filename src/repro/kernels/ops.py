@@ -11,10 +11,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import CSRkTiles, ELLMatrix
+from repro.sparse import CSRkTiles, ELLMatrix, SELLCSTiles
 from repro.kernels import ref
 from repro.kernels.spmv_csrk import spmv_csrk_tiles_pallas
 from repro.kernels.spmv_ell import spmv_ell_pallas
+from repro.kernels.spmv_sellcs import spmv_sellcs_pallas
 
 
 def _pad_x_to_blocks(x: jax.Array, window: int) -> jax.Array:
@@ -55,6 +56,31 @@ def spmv_csrk(
     return y
 
 
+def spmv_sellcs(
+    tiles: SELLCSTiles,
+    x: jax.Array,
+    *,
+    gather_mode: str = "onehot",
+    gather_chunk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """SELL-C-σ SpMV via the Pallas kernel (+ scatter back to original rows)."""
+    m = tiles.shape[0]
+    n_pad = -(-x.shape[0] // 128) * 128
+    xp = jnp.pad(x, (0, n_pad - x.shape[0]))
+    y_sorted = spmv_sellcs_pallas(
+        tiles.vals,
+        tiles.col_idx,
+        xp,
+        gather_chunk=gather_chunk,
+        gather_mode=gather_mode,
+        interpret=interpret,
+    )
+    # σ-sorted order → original row order; C-alignment pad rows → dump row m
+    out = jnp.zeros((m + 1,), y_sorted.dtype)
+    return out.at[tiles.row_perm].set(y_sorted)[:m]
+
+
 def spmv_ell(mat: ELLMatrix, x: jax.Array, *, row_tile: int = 256, interpret: bool = True):
     """ELL SpMV via the Pallas baseline kernel (rows padded to the tile)."""
     m = mat.vals.shape[0]
@@ -69,3 +95,4 @@ def spmv_ell(mat: ELLMatrix, x: jax.Array, *, row_tile: int = 256, interpret: bo
 # re-export oracles so callers can flip kernel↔oracle with one import site
 spmv_csrk_ref = ref.spmv_csrk_tiles
 spmv_ell_ref = ref.spmv_ell
+spmv_sellcs_ref = ref.spmv_sellcs

@@ -9,13 +9,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import (
+from repro.sparse import (
     BCSRMatrix,
     COOMatrix,
     CSRMatrix,
     CSRkMatrix,
     CSRkTiles,
     ELLMatrix,
+    SELLCSMatrix,
 )
 
 
@@ -108,6 +109,22 @@ def spmv_csrk_tiles(tiles: CSRkTiles, x: jax.Array) -> jax.Array:
     if tiles.remainder_nnz:
         y = y.at[tiles.rem_row].add(tiles.rem_val * x[tiles.rem_col])
     return y
+
+
+def spmv_sellcs(mat: SELLCSMatrix, x: jax.Array) -> jax.Array:
+    """SELL-C-σ SpMV oracle over the canonical flat slot arrays.
+
+    Per slot: contrib = vals · x[col]; slots are segment-summed by their
+    σ-sorted row id, then scattered back to the original row order via
+    ``row_perm`` (padding rows land in the dump row m and are dropped).
+    """
+    m = mat.shape[0]
+    contrib = mat.vals * x[mat.col_idx]
+    y_sorted = jax.ops.segment_sum(
+        contrib, mat.slot_row, num_segments=mat.m_pad
+    )
+    out = jnp.zeros((m + 1,), contrib.dtype)
+    return out.at[mat.row_perm].set(y_sorted)[:m]
 
 
 def spmm_csr(mat: CSRMatrix, X: jax.Array) -> jax.Array:

@@ -26,34 +26,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.formats import CSRkTiles
+from repro.sparse import CSRkTiles
+from repro.kernels.gather import gather_onehot as _gather_onehot
 
 GatherMode = Literal["onehot", "take"]
-
-
-def _gather_onehot(xw: jax.Array, lc: jax.Array, chunk: int) -> jax.Array:
-    """Gather xw[lc] as chunked one-hot matmuls (MXU-friendly).
-
-    xw: [2W] window values; lc: [S] int32 local columns. Returns [S].
-    """
-    (S,) = lc.shape
-    (W2,) = xw.shape
-    # chunk must divide S exactly (S is a multiple of 128 by construction)
-    chunk = min(chunk, S)
-    while S % chunk:
-        chunk -= 128
-    chunk = max(chunk, min(128, S))
-    num_chunks = S // chunk
-    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, W2), 1)
-
-    def body(i, acc):
-        lc_c = jax.lax.dynamic_slice(lc, (i * chunk,), (chunk,))
-        onehot = (lc_c[:, None] == cols).astype(xw.dtype)          # [chunk, 2W]
-        g = jnp.dot(onehot, xw, preferred_element_type=jnp.float32)
-        return jax.lax.dynamic_update_slice(acc, g.astype(acc.dtype), (i * chunk,))
-
-    acc0 = jnp.zeros((S,), jnp.float32)
-    return jax.lax.fori_loop(0, num_chunks, body, acc0)
 
 
 def _reduce_onehot(contrib: jax.Array, lr: jax.Array, rows: int) -> jax.Array:

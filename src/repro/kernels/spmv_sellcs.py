@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for SELL-C-σ SpMV (the irregular-matrix path).
+
+Mapping, following the CSR-k kernel's idiom (spmv_csrk.py):
+  * one C-row chunk  → one grid step (C = 8 sublanes, chunk cols = lanes)
+  * x[col_idx] gather → one-hot matmuls on the MXU (SpMV is bandwidth-bound,
+    so idle MXU FLOPs buy us out of scattered HBM access — same trade as the
+    CSR-k kernel)
+  * per-row reduction → a lane-dimension sum (rows are independent inside a
+    chunk, so no segmented reduction is needed — that is SELL's selling point)
+
+Unlike CSR-k there is no Band-k window guarantee: irregular matrices scatter
+columns anywhere, so each grid step sees the whole (padded) x in VMEM.  That
+bounds usable n by VMEM — acceptable for the repro suite and exactly the
+scalability pressure the banded CSR-k path avoids; the registry routes
+accordingly.
+
+Validated in ``interpret=True`` mode against ``ref.spmv_sellcs``
+(tests/test_sparse_registry.py sweeps shapes and dtypes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gather import gather_onehot
+
+
+def _gather_onehot_2d(x: jax.Array, idx: jax.Array, chunk: int) -> jax.Array:
+    """Gather x[idx] for a [C, W] index block via chunked one-hot matmuls.
+
+    x: [n_pad] padded vector; idx: [C, W] int32. Returns [C, W] float32.
+    """
+    C, W = idx.shape
+    return gather_onehot(x, idx.reshape(-1), chunk).reshape(C, W)
+
+
+def _kernel(
+    vals_ref,   # [1, C, W]
+    col_ref,    # [1, C, W]
+    x_ref,      # [n_pad]
+    y_ref,      # [C]
+    *,
+    gather_chunk: int,
+    gather_mode: str,
+):
+    vals = vals_ref[0]                                             # [C, W]
+    cols = col_ref[0]                                              # [C, W]
+    x = x_ref[...]                                                 # [n_pad]
+    if gather_mode == "take":
+        gathered = jnp.take(x, cols.reshape(-1), axis=0).reshape(cols.shape)
+        gathered = gathered.astype(jnp.float32)
+    else:
+        gathered = _gather_onehot_2d(x, cols, gather_chunk)
+    contrib = vals.astype(jnp.float32) * gathered                  # [C, W]
+    y_ref[...] = jnp.sum(contrib, axis=1).astype(y_ref.dtype)      # [C]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gather_chunk", "gather_mode", "interpret")
+)
+def spmv_sellcs_pallas(
+    vals: jax.Array,     # [T, C, W]
+    col_idx: jax.Array,  # [T, C, W]
+    x_padded: jax.Array, # [n_pad] — padded to a 128 multiple by ops.py
+    *,
+    gather_chunk: int = 512,
+    gather_mode: str = "onehot",
+    interpret: bool = True,
+) -> jax.Array:
+    """Run the SELL-C-σ kernel over all chunks. Returns y of [T * C] in
+    σ-sorted row order (ops.py scatters back to the original ordering)."""
+    T, C, W = vals.shape
+    n_pad = x_padded.shape[0]
+    kernel = functools.partial(
+        _kernel, gather_chunk=gather_chunk, gather_mode=gather_mode
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, C, W), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, C, W), lambda t: (t, 0, 0)),
+            pl.BlockSpec((n_pad,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((C,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((T * C,), x_padded.dtype),
+        interpret=interpret,
+    )(vals, col_idx, x_padded)

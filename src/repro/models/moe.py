@@ -26,7 +26,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 
 from repro.models.layers import dense_init
 
@@ -239,6 +239,6 @@ def moe_apply_ep(
             P(data_axes),                          # tokens sharded on batch
         ),
         out_specs=(P(data_axes), P()),
-        check_vma=False,
+        check_rep=False,
     )
     return f(params["router"], params["w_in"], params["w_gate"], params["w_out"], x)

@@ -1,0 +1,62 @@
+"""Coordinate-list (COO) sparse container (paper Sec. 2.1)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+
+_INT = jnp.int32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class COOMatrix:
+    """Coordinate-list matrix (paper Sec. 2.1)."""
+
+    row_idx: Array  # [nnz] int32
+    col_idx: Array  # [nnz] int32
+    vals: Array     # [nnz] float
+    shape: Tuple[int, int]
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.row_idx, self.col_idx, self.vals), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        row_idx, col_idx, vals = children
+        return cls(row_idx, col_idx, vals, aux[0])
+
+    # -- basics -------------------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    def todense(self) -> Array:
+        out = jnp.zeros(self.shape, self.vals.dtype)
+        return out.at[self.row_idx, self.col_idx].add(self.vals)
+
+    def tocsr(self):
+        from repro.sparse.csr import csr_from_coo
+
+        return csr_from_coo(self)
+
+    @classmethod
+    def fromdense(cls, dense: Array) -> "COOMatrix":
+        dense = np.asarray(dense)
+        r, c = np.nonzero(dense)
+        return cls(
+            jnp.asarray(r, _INT),
+            jnp.asarray(c, _INT),
+            jnp.asarray(dense[r, c]),
+            dense.shape,
+        )

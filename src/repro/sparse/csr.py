@@ -1,0 +1,136 @@
+"""Compressed sparse row (CSR) container — the interchange format every other
+format in the registry converts from (the paper's heterogeneity pivot)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.coo import COOMatrix
+
+Array = Any
+
+_INT = jnp.int32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSRMatrix:
+    """Compressed sparse row matrix (paper Sec. 2.1, Fig. 2 black arrays)."""
+
+    row_ptr: Array  # [m+1] int32, cumulative nnz
+    col_idx: Array  # [nnz] int32
+    vals: Array     # [nnz] float
+    shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.row_ptr, self.col_idx, self.vals), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        row_ptr, col_idx, vals = children
+        return cls(row_ptr, col_idx, vals, aux[0])
+
+    @property
+    def nnz(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    @property
+    def rdensity(self) -> float:
+        """Mean row density NNZ/N — the tuning model's sole input (paper Sec. 4)."""
+        return self.nnz / max(self.m, 1)
+
+    def row_lengths(self) -> Array:
+        return self.row_ptr[1:] - self.row_ptr[:-1]
+
+    def todense(self) -> Array:
+        rows = jnp.repeat(
+            jnp.arange(self.m, dtype=_INT),
+            self.row_lengths(),
+            total_repeat_length=self.nnz,
+        )
+        out = jnp.zeros(self.shape, self.vals.dtype)
+        return out.at[rows, self.col_idx].add(self.vals)
+
+    def tocoo(self) -> COOMatrix:
+        rows = jnp.repeat(
+            jnp.arange(self.m, dtype=_INT),
+            self.row_lengths(),
+            total_repeat_length=self.nnz,
+        )
+        return COOMatrix(rows, self.col_idx, self.vals, self.shape)
+
+    @classmethod
+    def fromdense(cls, dense: Array) -> "CSRMatrix":
+        return COOMatrix.fromdense(dense).tocsr()
+
+    def permute_rows(self, perm: np.ndarray) -> "CSRMatrix":
+        """Return PA for a row permutation ``perm`` (new row i = old row perm[i])."""
+        perm = np.asarray(perm)
+        rp = np.asarray(self.row_ptr)
+        ci = np.asarray(self.col_idx)
+        vl = np.asarray(self.vals)
+        lengths = (rp[1:] - rp[:-1])[perm]
+        new_rp = np.zeros(self.m + 1, np.int32)
+        np.cumsum(lengths, out=new_rp[1:])
+        new_ci = np.empty_like(ci)
+        new_vl = np.empty_like(vl)
+        for i, p in enumerate(perm):
+            s, e = rp[p], rp[p + 1]
+            ns = new_rp[i]
+            new_ci[ns : ns + (e - s)] = ci[s:e]
+            new_vl[ns : ns + (e - s)] = vl[s:e]
+        return CSRMatrix(
+            jnp.asarray(new_rp), jnp.asarray(new_ci), jnp.asarray(new_vl), self.shape
+        )
+
+    def permute_cols(self, perm: np.ndarray) -> "CSRMatrix":
+        """Return A P^T: new column j corresponds to old column perm[j]."""
+        perm = np.asarray(perm)
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(perm.size)
+        new_ci = inv[np.asarray(self.col_idx)]
+        # keep rows sorted by column for band-window friendliness
+        rp = np.asarray(self.row_ptr)
+        vl = np.asarray(self.vals)
+        out_ci = np.empty_like(new_ci)
+        out_vl = np.empty_like(vl)
+        for i in range(self.m):
+            s, e = rp[i], rp[i + 1]
+            order = np.argsort(new_ci[s:e], kind="stable")
+            out_ci[s:e] = new_ci[s:e][order]
+            out_vl[s:e] = vl[s:e][order]
+        return CSRMatrix(self.row_ptr, jnp.asarray(out_ci), jnp.asarray(out_vl), self.shape)
+
+    def symmetric_permute(self, perm: np.ndarray) -> "CSRMatrix":
+        """P A P^T — what a reordering like RCM/Band-k applies."""
+        return self.permute_rows(perm).permute_cols(perm)
+
+
+def csr_from_coo(coo: COOMatrix) -> CSRMatrix:
+    """Sort-based COO→CSR conversion (host-side numpy: setup phase)."""
+    m, n = coo.shape
+    r = np.asarray(coo.row_idx)
+    c = np.asarray(coo.col_idx)
+    v = np.asarray(coo.vals)
+    order = np.lexsort((c, r))
+    r, c, v = r[order], c[order], v[order]
+    row_ptr = np.zeros(m + 1, np.int32)
+    np.add.at(row_ptr, r + 1, 1)
+    np.cumsum(row_ptr, out=row_ptr)
+    return CSRMatrix(jnp.asarray(row_ptr), jnp.asarray(c, _INT), jnp.asarray(v), (m, n))

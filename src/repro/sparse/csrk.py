@@ -1,0 +1,311 @@
+"""CSR-k containers: the paper's hierarchical format plus its TPU tile view.
+
+CSR-k (Lane & Booth 2022) stores a sparse matrix as plain CSR plus k-1 extra
+pointer arrays that group contiguous rows into super-rows (``sr_ptr``) and
+contiguous super-rows into super-super-rows (``ssr_ptr``).  The base CSR arrays
+are untouched, so any CSR consumer can read a CSR-k matrix directly — that is
+the paper's heterogeneity argument and we preserve it here: ``CSRkMatrix.csr``
+is a zero-copy view.
+
+The TPU execution path additionally materialises a *padded tile view*
+(:class:`CSRkTiles`) in which every super-super-row owns a fixed number of rows
+and a fixed number of nnz slots so a Pallas ``BlockSpec`` can move one SSR per
+grid step.  The tile view is derived, never stored as the source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+
+Array = Any
+
+_INT = jnp.int32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSRkMatrix:
+    """CSR-k: CSR + super-row / super-super-row pointer arrays (paper Fig. 2).
+
+    ``k == 2`` → only ``sr_ptr`` is meaningful (``ssr_ptr`` groups all SRs into
+    one trivial SSR); ``k == 3`` → both levels are real. This mirrors the
+    paper's CSR-2-on-CPU / CSR-3-on-GPU split.
+    """
+
+    row_ptr: Array   # [m+1]   cumulative nnz per row
+    col_idx: Array   # [nnz]
+    vals: Array      # [nnz]
+    sr_ptr: Array    # [num_sr+1]  cumulative rows per super-row
+    ssr_ptr: Array   # [num_ssr+1] cumulative super-rows per super-super-row
+    shape: Tuple[int, int]
+    k: int = 3
+
+    def tree_flatten(self):
+        return (
+            (self.row_ptr, self.col_idx, self.vals, self.sr_ptr, self.ssr_ptr),
+            (self.shape, self.k),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shape=aux[0], k=aux[1])
+
+    # -- the heterogeneity property: CSR view is zero-copy -------------------
+    @property
+    def csr(self) -> CSRMatrix:
+        return CSRMatrix(self.row_ptr, self.col_idx, self.vals, self.shape)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    @property
+    def num_sr(self) -> int:
+        return int(self.sr_ptr.shape[0]) - 1
+
+    @property
+    def num_ssr(self) -> int:
+        return int(self.ssr_ptr.shape[0]) - 1
+
+    @property
+    def rdensity(self) -> float:
+        return self.nnz / max(self.m, 1)
+
+    def todense(self) -> Array:
+        return self.csr.todense()
+
+    def overhead_bytes(self) -> int:
+        """Extra bytes over plain CSR (the paper's Fig. 12 quantity)."""
+        extra = self.sr_ptr.size
+        if self.k >= 3:
+            extra += self.ssr_ptr.size
+        return int(extra) * 4
+
+    def overhead_fraction(self) -> float:
+        base = (2 * self.nnz + self.m + 1) * 4
+        return self.overhead_bytes() / base
+
+    def validate(self) -> None:
+        sr = np.asarray(self.sr_ptr)
+        ssr = np.asarray(self.ssr_ptr)
+        rp = np.asarray(self.row_ptr)
+        assert sr[0] == 0 and sr[-1] == self.m, "sr_ptr must cover all rows"
+        assert ssr[0] == 0 and ssr[-1] == self.num_sr, "ssr_ptr must cover all SRs"
+        assert np.all(np.diff(sr) > 0), "super-rows must be non-empty"
+        assert np.all(np.diff(ssr) > 0), "super-super-rows must be non-empty"
+        assert rp[-1] == self.nnz
+
+
+def build_csrk(
+    csr: CSRMatrix,
+    srs: int,
+    ssrs: int | None = None,
+    k: int = 3,
+) -> CSRkMatrix:
+    """Group rows into super-rows of ~``srs`` rows and SRs into SSRs of ~``ssrs``
+    super-rows.  Sizes follow the tuner; groups are contiguous (paper Fig. 2).
+    """
+    m = csr.m
+    srs = max(int(srs), 1)
+    num_sr = (m + srs - 1) // srs
+    sr_ptr = np.minimum(np.arange(num_sr + 1, dtype=np.int64) * srs, m).astype(np.int32)
+    if k >= 3:
+        ssrs = max(int(ssrs or 1), 1)
+        num_ssr = (num_sr + ssrs - 1) // ssrs
+        ssr_ptr = np.minimum(
+            np.arange(num_ssr + 1, dtype=np.int64) * ssrs, num_sr
+        ).astype(np.int32)
+    else:
+        ssr_ptr = np.asarray([0, num_sr], np.int32)
+    return CSRkMatrix(
+        csr.row_ptr,
+        csr.col_idx,
+        csr.vals,
+        jnp.asarray(sr_ptr),
+        jnp.asarray(ssr_ptr),
+        csr.shape,
+        k=k,
+    )
+
+
+# ---------------------------------------------------------------------------
+# CSR-k padded tile view for the TPU kernel
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSRkTiles:
+    """Padded per-SSR tile view of a CSR-k matrix (TPU adaptation, DESIGN §2).
+
+    Each SSR (one Pallas grid step) owns:
+      * ``rows_per_tile`` contiguous output rows (uniform; last tile padded),
+      * ``slots`` nnz slots (padded to the max SSR nnz, rounded up to 128),
+      * a contiguous x-window of ``2·window`` columns starting at block
+        ``win_block`` (element offset ``win_block · window``).
+
+    The window is addressed as *two adjacent blocks* of width ``window`` so a
+    ``BlockSpec`` index map (which works in block units) can place it: the
+    SSR's minimum column ``lo`` gives ``win_block = lo // window`` and, since
+    Band-k bounds the SSR column span to ≤ ``window``, every in-band column
+    satisfies ``0 ≤ col − win_block·window < 2·window``.
+
+    ``local_col`` indexes within the 2-block window; ``local_row`` within the
+    tile's rows. Padding slots carry ``vals == 0`` and index 0 so they are
+    numerically inert. Entries outside the window are diverted to a COO
+    remainder (empty after Band-k on all suites).
+    """
+
+    vals: Array        # [T, slots]
+    local_col: Array   # [T, slots] int32, in [0, 2*window)
+    local_row: Array   # [T, slots] int32, in [0, rows_per_tile)
+    win_block: Array   # [T] int32, x-window block index (elements = blk*window)
+    # COO remainder for out-of-window entries
+    rem_row: Array     # [R] int32
+    rem_col: Array     # [R] int32
+    rem_val: Array     # [R]
+    shape: Tuple[int, int]
+    rows_per_tile: int
+    window: int
+
+    def tree_flatten(self):
+        return (
+            (self.vals, self.local_col, self.local_row, self.win_block,
+             self.rem_row, self.rem_col, self.rem_val),
+            (self.shape, self.rows_per_tile, self.window),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shape=aux[0], rows_per_tile=aux[1], window=aux[2])
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def slots(self) -> int:
+        return int(self.vals.shape[1])
+
+    @property
+    def remainder_nnz(self) -> int:
+        return int(self.rem_val.shape[0])
+
+    def padding_overhead(self) -> float:
+        """Padded-slot fraction: the tile view's memory-waste metric."""
+        real = float(np.count_nonzero(np.asarray(self.vals))) + self.remainder_nnz
+        return (self.num_tiles * self.slots + self.remainder_nnz - real) / max(real, 1.0)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def tiles_from_csrk(mat: CSRkMatrix, window: int | None = None) -> CSRkTiles:
+    """Materialise the padded per-SSR tile view (host-side setup, numpy).
+
+    ``window`` is the x-window *block* width in columns (rounded up to 128).
+    If None it is chosen as the max SSR column span rounded up — i.e. Band-k
+    decides it (DESIGN §2: banding makes the window contiguous and small).
+    """
+    rp = np.asarray(mat.row_ptr)
+    ci = np.asarray(mat.col_idx)
+    vl = np.asarray(mat.vals)
+    sr = np.asarray(mat.sr_ptr)
+    ssr = np.asarray(mat.ssr_ptr)
+    m, n = mat.shape
+
+    # rows covered by each SSR. The kernel's y BlockSpec needs a uniform row
+    # stride per grid step, so SSRs must be uniform (build_csrk guarantees it;
+    # Band-k hierarchies are regularised before reaching the kernel path).
+    ssr_row_start = sr[ssr[:-1]]
+    ssr_row_end = sr[ssr[1:]]
+    T = len(ssr_row_start)
+    rows_per_tile = int((ssr_row_end - ssr_row_start).max(initial=1))
+    if not np.all(ssr_row_start == np.arange(T) * rows_per_tile):
+        raise ValueError(
+            "tiles_from_csrk requires uniform SSR row counts "
+            "(use build_csrk / regularised hierarchy for the TPU kernel path)"
+        )
+
+    # column span per SSR → window block size (Band-k bounds this)
+    spans = []
+    for t in range(T):
+        s, e = rp[ssr_row_start[t]], rp[ssr_row_end[t]]
+        if e > s:
+            spans.append(int(ci[s:e].max()) - int(ci[s:e].min()) + 1)
+        else:
+            spans.append(1)
+    if window is None:
+        window = _round_up(max(spans), 128)
+    else:
+        window = _round_up(int(window), 128)
+
+    max_nnz = 0
+    for t in range(T):
+        max_nnz = max(max_nnz, int(rp[ssr_row_end[t]] - rp[ssr_row_start[t]]))
+    slots = _round_up(max(max_nnz, 1), 128)
+
+    tvals = np.zeros((T, slots), vl.dtype)
+    tlc = np.zeros((T, slots), np.int32)
+    tlr = np.zeros((T, slots), np.int32)
+    twin = np.zeros((T,), np.int32)
+    rem_r, rem_c, rem_v = [], [], []
+
+    for t in range(T):
+        r0, r1 = int(ssr_row_start[t]), int(ssr_row_end[t])
+        s, e = int(rp[r0]), int(rp[r1])
+        if e == s:
+            continue
+        cols = ci[s:e]
+        vals = vl[s:e]
+        rows = np.repeat(np.arange(r0, r1), rp[r0 + 1 : r1 + 1] - rp[r0:r1])
+        blk = int(cols.min()) // window
+        twin[t] = blk
+        start = blk * window
+        inw = (cols >= start) & (cols < start + 2 * window)
+        k = int(inw.sum())
+        tvals[t, :k] = vals[inw]
+        tlc[t, :k] = cols[inw] - start
+        tlr[t, :k] = rows[inw] - r0
+        if k < len(cols):
+            out = ~inw
+            rem_r.append(rows[out])
+            rem_c.append(cols[out])
+            rem_v.append(vals[out])
+
+    if rem_r:
+        rem_r = np.concatenate(rem_r)
+        rem_c = np.concatenate(rem_c)
+        rem_v = np.concatenate(rem_v)
+    else:
+        rem_r = np.zeros((0,), np.int32)
+        rem_c = np.zeros((0,), np.int32)
+        rem_v = np.zeros((0,), vl.dtype)
+
+    return CSRkTiles(
+        jnp.asarray(tvals),
+        jnp.asarray(tlc),
+        jnp.asarray(tlr),
+        jnp.asarray(twin, _INT),
+        jnp.asarray(rem_r, _INT),
+        jnp.asarray(rem_c, _INT),
+        jnp.asarray(rem_v),
+        (m, n),
+        rows_per_tile,
+        window,
+    )

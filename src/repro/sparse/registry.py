@@ -1,0 +1,122 @@
+"""Sparse-format registry + O(1) auto-selection.
+
+Liu & Vinter (arXiv:1504.06474) argue heterogeneous SpMV wants per-matrix
+format dispatch; the paper's own evaluation (Sec. 6) limits CSR-k's wins to
+regular matrices.  This module is the dispatch point: formats register a
+:class:`FormatSpec` with a *constant-time* predicate over
+:class:`~repro.sparse.stats.MatrixStats`, and :func:`select_format` picks the
+first match in priority order.  Selection never touches the matrix data —
+only the stats — so it stays O(1), in the same spirit as the paper's
+constant-time tuner.
+
+Built-in policy (the acceptance rule of record):
+
+=================  =========================================  ==============
+format             matches                                    role
+=================  =========================================  ==============
+``sellcs``         ``row_var > 10`` (irregular, Sec. 6)       SELL-C-σ path
+``csrk``           always (fallback)                          paper's path
+=================  =========================================  ==============
+
+Baseline formats (``ell``, ``bcsr``, ``csr5``) are registered non-selectable:
+they stay addressable through the registry (benchmarks look them up by name
+and run their converters/oracles directly), but the auto-selector never picks
+them and ``prepare`` only executes the ``csrk``/``sellcs`` backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.sparse.stats import REGULAR_ROW_VAR_MAX, MatrixStats
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatSpec:
+    """A registered sparse format.
+
+    ``matches(stats, device)`` must be O(1) — a predicate over the summary
+    statistics only.  ``selectable=False`` keeps a format addressable by name
+    (``get_format`` for benchmarks/tooling) without the auto selector ever
+    routing to it.
+    """
+
+    name: str
+    description: str
+    matches: Callable[[MatrixStats, str], bool]
+    priority: int = 0          # higher wins; ties broken by registration order
+    selectable: bool = True
+
+
+_REGISTRY: Dict[str, FormatSpec] = {}
+_ORDER: List[str] = []
+
+
+def register_format(spec: FormatSpec, *, overwrite: bool = False) -> FormatSpec:
+    """Add a format to the registry. Idempotent only with ``overwrite=True``."""
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"format {spec.name!r} already registered")
+    if spec.name not in _REGISTRY:
+        _ORDER.append(spec.name)
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_format(name: str) -> FormatSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown format {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_formats() -> List[str]:
+    return list(_ORDER)
+
+
+def select_format(stats: MatrixStats, device: str = "tpu_v5e") -> str:
+    """O(1) format choice: first matching selectable spec in priority order."""
+    specs = sorted(
+        (s for s in (_REGISTRY[n] for n in _ORDER) if s.selectable),
+        key=lambda s: -s.priority,
+    )
+    for spec in specs:
+        if spec.matches(stats, device):
+            return spec.name
+    raise LookupError("no registered format matches (csrk fallback missing?)")
+
+
+# -- built-in registrations --------------------------------------------------
+
+register_format(FormatSpec(
+    name="sellcs",
+    description=(
+        "SELL-C-σ (Kreutzer et al.): σ-sorted C-row chunks, per-chunk "
+        "padding — the irregular-matrix path"
+    ),
+    matches=lambda stats, device: stats.row_var > REGULAR_ROW_VAR_MAX,
+    priority=10,
+))
+
+register_format(FormatSpec(
+    name="csrk",
+    description=(
+        "CSR-k (Lane & Booth): CSR + super-row hierarchy, Band-k + "
+        "constant-time tuner — the paper's regular-matrix path"
+    ),
+    matches=lambda stats, device: True,
+    priority=0,
+))
+
+# benchmark-only baselines: forcible by name, never auto-selected
+for _name, _desc in (
+    ("ell", "ELLPACK baseline (paper Sec. 2.3) — global max-row padding"),
+    ("bcsr", "Block CSR baseline (paper Sec. 2.1)"),
+    ("csr5", "CSR5-like competitor stand-in (paper Sec. 2.4)"),
+):
+    register_format(FormatSpec(
+        name=_name, description=_desc,
+        matches=lambda stats, device: False,
+        priority=-10, selectable=False,
+    ))

@@ -1,0 +1,265 @@
+"""SELL-C-σ: the SIMD-friendly format for *irregular* matrices.
+
+Kreutzer et al. (arXiv:1307.6209) unify GPU ELLPACK variants into SELL-C-σ:
+rows are sorted by descending length inside windows of σ rows (global enough
+to pack similar rows together, local enough to keep the permutation cheap),
+then grouped into chunks of C consecutive rows; each chunk is padded only to
+*its own* longest row and stored column-major.  Padding cost scales with the
+per-chunk spread instead of the global max row length, which is what makes
+the format viable where ELL explodes (power-law degree distributions).
+
+Two containers live here:
+
+* :class:`SELLCSMatrix` — the canonical format: flat ``vals``/``col_idx``
+  slot arrays with per-chunk widths (``chunk_ptr``), the σ-window row
+  permutation, and a per-slot sorted-row id so a pure-jnp oracle can consume
+  it directly.  Storage accounting (``padding_overhead``) is measured here.
+* :class:`SELLCSTiles` — the derived Pallas view: every chunk padded to the
+  max chunk width (rounded to the 128-lane grid) so a static ``BlockSpec``
+  can move one chunk per grid step, mirroring how :class:`CSRkTiles` pads
+  SSRs.  Derived, never the source of truth.
+
+On TPU, C maps to the 8-sublane dimension and chunk columns to lanes — the
+same mapping the original paper uses for warps/SIMD registers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+
+Array = Any
+
+_INT = jnp.int32
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SELLCSMatrix:
+    """Canonical SELL-C-σ container (flat slots, per-chunk widths).
+
+    Slot layout inside chunk ``t`` (width ``w_t``) is column-major:
+    slot ``chunk_ptr[t] + j·C + r`` holds column ``j`` of the chunk's
+    ``r``-th row (rows in σ-sorted order).  Padding slots carry ``vals == 0``
+    and ``col_idx == 0`` so they are numerically inert.
+
+    ``row_perm[i]`` is the *original* row id stored at sorted position ``i``;
+    positions past ``m`` (C-alignment padding) point at the dump row ``m``.
+    """
+
+    vals: Array       # [slots] float — flat per-chunk column-major slots
+    col_idx: Array    # [slots] int32
+    slot_row: Array   # [slots] int32 — sorted-space row id of each slot
+    chunk_ptr: Array  # [T+1] int32 — slot offset of each chunk
+    row_perm: Array   # [m_pad] int32 — sorted position → original row (pad → m)
+    shape: Tuple[int, int]
+    C: int
+    sigma: int
+    nnz_real: int = 0  # source-CSR nnz (explicit zeros included, padding not)
+
+    def tree_flatten(self):
+        return (
+            (self.vals, self.col_idx, self.slot_row, self.chunk_ptr, self.row_perm),
+            (self.shape, self.C, self.sigma, self.nnz_real),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shape=aux[0], C=aux[1], sigma=aux[2], nnz_real=aux[3])
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    @property
+    def m_pad(self) -> int:
+        return int(self.row_perm.shape[0])
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.chunk_ptr.shape[0]) - 1
+
+    @property
+    def slots(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    def chunk_widths(self) -> np.ndarray:
+        return (np.diff(np.asarray(self.chunk_ptr)) // self.C).astype(np.int64)
+
+    @property
+    def nnz(self) -> int:
+        """Source-CSR nnz — counts explicitly stored zeros, unlike a
+        count_nonzero over the slot arrays would."""
+        return self.nnz_real
+
+    def padding_overhead(self) -> float:
+        """Padded-slot fraction — SELL-C-σ's defining metric (vs. ELL's)."""
+        real = float(self.nnz)
+        return (self.slots - real) / max(real, 1.0)
+
+    def overhead_bytes(self) -> int:
+        """Metadata bytes beyond the slot arrays: chunk_ptr + row_perm."""
+        return (int(self.chunk_ptr.size) + int(self.row_perm.size)) * 4
+
+    def todense(self) -> Array:
+        """Dense reconstruction via the slot arrays (round-trip tests)."""
+        m, n = self.shape
+        rows = jnp.concatenate([jnp.asarray(self.row_perm), jnp.asarray([m], _INT)])
+        orig_row = rows[self.slot_row]
+        out = jnp.zeros((m + 1, n), self.vals.dtype)
+        out = out.at[orig_row, self.col_idx].add(self.vals)
+        return out[:m]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SELLCSTiles:
+    """Uniform-width Pallas view of a SELL-C-σ matrix (one chunk per grid step).
+
+    Chunks are padded from their own width ``w_t`` to the global max width
+    (rounded up to 128 lanes) so a static ``BlockSpec`` applies — the same
+    worst-tile padding trade :class:`CSRkTiles` makes for SSR nnz slots.
+    The canonical flat container remains the storage-accounting truth.
+    """
+
+    vals: Array      # [T, C, W] float
+    col_idx: Array   # [T, C, W] int32 (padding → 0)
+    row_perm: Array  # [m_pad] int32 — sorted position → original row (pad → m)
+    shape: Tuple[int, int]
+    C: int
+
+    def tree_flatten(self):
+        return (self.vals, self.col_idx, self.row_perm), (self.shape, self.C)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shape=aux[0], C=aux[1])
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def width(self) -> int:
+        return int(self.vals.shape[2])
+
+    def padding_overhead(self) -> float:
+        real = float(np.count_nonzero(np.asarray(self.vals)))
+        return (self.vals.size - real) / max(real, 1.0)
+
+
+def sellcs_from_csr(
+    csr: CSRMatrix, C: int = 8, sigma: int | None = None
+) -> SELLCSMatrix:
+    """Build SELL-C-σ from CSR (host-side numpy: setup phase).
+
+    ``C`` defaults to 8 — the TPU sublane count, the natural chunk height for
+    a Pallas kernel (SIMD-width analogue of the original paper's C=warp).
+    ``sigma`` defaults to ``16·C``; ``sigma = m`` gives the full global sort
+    (maximum packing, global permutation), ``sigma = 1`` degrades to plain
+    SELL-C with no sorting.
+    """
+    m, n = csr.shape
+    C = max(int(C), 1)
+    if sigma is None:
+        sigma = 16 * C
+    sigma = max(int(sigma), 1)
+
+    rp = np.asarray(csr.row_ptr)
+    ci = np.asarray(csr.col_idx)
+    vl = np.asarray(csr.vals)
+    lengths = (rp[1:] - rp[:-1]).astype(np.int64)
+
+    m_pad = _round_up(max(m, 1), C)
+    lengths_pad = np.zeros(m_pad, np.int64)
+    lengths_pad[:m] = lengths
+
+    # σ-window sort: descending row length inside each window of σ rows
+    order = np.arange(m_pad)
+    for w0 in range(0, m_pad, sigma):
+        w1 = min(w0 + sigma, m_pad)
+        sub = np.argsort(-lengths_pad[w0:w1], kind="stable")
+        order[w0:w1] = w0 + sub
+    # row_perm: sorted position → original row; C-alignment pad rows → dump m
+    row_perm = np.where(order < m, order, m).astype(np.int32)
+    sorted_lengths = lengths_pad[order]
+
+    T = m_pad // C
+    widths = sorted_lengths.reshape(T, C).max(axis=1)
+    chunk_ptr = np.zeros(T + 1, np.int64)
+    np.cumsum(widths * C, out=chunk_ptr[1:])
+    slots = int(chunk_ptr[-1])
+
+    svals = np.zeros(slots, vl.dtype)
+    scols = np.zeros(slots, np.int32)
+    srows = np.zeros(slots, np.int32)
+    for t in range(T):
+        base = int(chunk_ptr[t])
+        w = int(widths[t])
+        # every slot in the chunk records its sorted-space row id
+        srows[base : base + w * C] = np.tile(np.arange(t * C, (t + 1) * C), w)
+        for r in range(C):
+            orig = int(row_perm[t * C + r])
+            if orig >= m:
+                continue
+            s, e = int(rp[orig]), int(rp[orig + 1])
+            L = e - s
+            # column-major within the chunk: row r's j-th nnz at base + j*C + r
+            svals[base + r : base + L * C : C] = vl[s:e]
+            scols[base + r : base + L * C : C] = ci[s:e]
+
+    return SELLCSMatrix(
+        jnp.asarray(svals),
+        jnp.asarray(scols, _INT),
+        jnp.asarray(srows, _INT),
+        jnp.asarray(chunk_ptr, _INT),
+        jnp.asarray(row_perm, _INT),
+        (m, n),
+        C=C,
+        sigma=sigma,
+        nnz_real=csr.nnz,
+    )
+
+
+def tiles_from_sellcs(mat: SELLCSMatrix, lane: int = 128) -> SELLCSTiles:
+    """Materialise the uniform-width Pallas view (host-side setup, numpy)."""
+    T, C = mat.num_chunks, mat.C
+    widths = mat.chunk_widths()
+    W = _round_up(int(widths.max(initial=1)), lane)
+    cp = np.asarray(mat.chunk_ptr)
+    fv = np.asarray(mat.vals)
+    fc = np.asarray(mat.col_idx)
+    pvals = np.zeros((T, C, W), fv.dtype)
+    pcols = np.zeros((T, C, W), np.int32)
+    for t in range(T):
+        w = int(widths[t])
+        if w == 0:
+            continue
+        base = int(cp[t])
+        # flat layout is column-major → [w, C] then transpose to [C, w]
+        pvals[t, :, :w] = fv[base : base + w * C].reshape(w, C).T
+        pcols[t, :, :w] = fc[base : base + w * C].reshape(w, C).T
+    return SELLCSTiles(
+        jnp.asarray(pvals),
+        jnp.asarray(pcols),
+        mat.row_perm,
+        mat.shape,
+        C=C,
+    )

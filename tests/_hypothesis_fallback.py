@@ -1,0 +1,68 @@
+"""Minimal stand-in for ``hypothesis`` so tier-1 collection never hard-fails.
+
+Only the surface used by this test suite is provided: ``given`` with keyword
+strategies, ``settings(max_examples=..., deadline=...)``, and the
+``integers``/``floats`` strategies.  Examples are drawn from a fixed-seed rng,
+so the fallback is deterministic (no shrinking, no database) — install the
+real ``hypothesis`` (see requirements-dev.txt) for full property testing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+class _Strategies:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+
+
+st = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(0)
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide drawn params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = inspect.Signature(
+            [p for name, p in sig.parameters.items() if name not in strategies]
+        )
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return deco

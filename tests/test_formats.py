@@ -2,7 +2,11 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is a dev-only dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - minimal installs
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.formats import (
     COOMatrix, CSRMatrix, build_csrk, tiles_from_csrk,

@@ -4,7 +4,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is a dev-only dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - minimal installs
+    from _hypothesis_fallback import given, settings, st
 
 from repro.models.linear_attention import (
     LOG_W_MIN, chunked_linear_attention, linear_attention_decode,

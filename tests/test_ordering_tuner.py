@@ -1,7 +1,10 @@
 """Band-k ordering, RCM, and the constant-time tuning model (paper Sec. 4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is a dev-only dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - minimal installs
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.formats import CSRMatrix
 from repro.core.ordering import bandk, bandwidth, rcm, graph_from_csr, coarsen

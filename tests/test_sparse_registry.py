@@ -1,0 +1,222 @@
+"""Sparse-format registry subsystem: stats, routing, SELL-C-σ correctness."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.sparse import (
+    CSRMatrix,
+    FormatSpec,
+    MatrixStats,
+    REGULAR_ROW_VAR_MAX,
+    available_formats,
+    compute_stats,
+    get_format,
+    register_format,
+    select_format,
+    sellcs_from_csr,
+    tiles_from_sellcs,
+)
+from repro.configs.spmv_suite import grid_laplacian_2d, load_suite
+
+
+def powerlaw_csr(rng, m=128, scale=4.0):
+    """Power-law nnz/row matrix — the canonical irregular case."""
+    lengths = np.minimum((rng.pareto(1.0, m) * scale + 1).astype(int), m)
+    dense = np.zeros((m, m), np.float32)
+    for i, L in enumerate(lengths):
+        dense[i, rng.choice(m, size=L, replace=False)] = rng.standard_normal(L)
+    return CSRMatrix.fromdense(dense), dense
+
+
+# --- stats -------------------------------------------------------------------
+
+
+def test_stats_on_known_stencil():
+    """5-point Laplacian: every row has ≤ 5 nnz, tight variance, known nnz."""
+    A = grid_laplacian_2d(8, 8)  # 64 rows
+    st = compute_stats(A)
+    assert st.m == st.n == 64
+    assert st.nnz == A.nnz
+    lengths = np.diff(np.asarray(A.row_ptr))
+    assert st.row_max == lengths.max() == 5
+    np.testing.assert_allclose(st.rdensity, lengths.mean())
+    np.testing.assert_allclose(st.row_var, lengths.var())
+    assert st.is_regular
+
+
+def test_stats_tridiagonal_bandwidth():
+    dense = np.diag(np.ones(6)) + np.diag(np.ones(5), 1) + np.diag(np.ones(5), -1)
+    st = compute_stats(CSRMatrix.fromdense(dense.astype(np.float32)))
+    assert st.bandwidth == 1
+    assert st.row_max == 3
+    assert st.row_var < 1.0
+
+
+def test_stats_empty_matrix():
+    A = CSRMatrix(
+        jnp.zeros(5, jnp.int32), jnp.zeros(0, jnp.int32),
+        jnp.zeros(0, jnp.float32), (4, 4),
+    )
+    st = compute_stats(A)
+    assert st.nnz == 0 and st.bandwidth == 0 and st.row_max == 0
+
+
+# --- registry / routing ------------------------------------------------------
+
+
+def _stats(row_var, rdensity=5.0):
+    return MatrixStats(m=100, n=100, nnz=500, rdensity=rdensity,
+                       row_var=row_var, row_max=10, bandwidth=10)
+
+
+def test_select_format_regular_vs_irregular():
+    assert select_format(_stats(row_var=0.0)) == "csrk"
+    assert select_format(_stats(row_var=REGULAR_ROW_VAR_MAX)) == "csrk"
+    assert select_format(_stats(row_var=REGULAR_ROW_VAR_MAX + 0.1)) == "sellcs"
+    assert select_format(_stats(row_var=1e6)) == "sellcs"
+
+
+def test_registry_contents_and_baselines_not_selectable():
+    names = available_formats()
+    assert {"csrk", "sellcs", "ell", "bcsr", "csr5"} <= set(names)
+    for baseline in ("ell", "bcsr", "csr5"):
+        assert not get_format(baseline).selectable
+    with pytest.raises(KeyError):
+        get_format("no-such-format")
+
+
+def test_register_format_rejects_duplicates():
+    spec = FormatSpec(name="csrk", description="dup",
+                      matches=lambda s, d: True)
+    with pytest.raises(ValueError):
+        register_format(spec)
+    # overwrite round-trip: replace then restore the original
+    original = get_format("csrk")
+    try:
+        register_format(spec, overwrite=True)
+        assert get_format("csrk").description == "dup"
+    finally:
+        register_format(original, overwrite=True)
+
+
+def test_routing_on_suite(rng):
+    """Every suite matrix routes by the Sec. 6 variance rule."""
+    for name, A in load_suite(scale=512).items():
+        st = compute_stats(A)
+        want = "csrk" if st.row_var <= REGULAR_ROW_VAR_MAX else "sellcs"
+        assert select_format(st) == want, name
+
+
+# --- SELL-C-σ container ------------------------------------------------------
+
+
+@pytest.mark.parametrize("C,sigma", [(8, None), (8, 32), (4, 1), (16, 128)])
+def test_sellcs_roundtrip_vs_dense(rng, C, sigma):
+    A, dense = powerlaw_csr(rng, m=96)
+    sc = sellcs_from_csr(A, C=C, sigma=sigma)
+    np.testing.assert_allclose(np.asarray(sc.todense()), dense, rtol=1e-5, atol=1e-6)
+    assert sc.nnz == A.nnz
+    assert sc.num_chunks == -(-96 // C)
+    # chunk_ptr covers exactly the slot arrays
+    assert int(np.asarray(sc.chunk_ptr)[-1]) == sc.slots
+
+
+def test_sellcs_sigma_sorting_reduces_padding(rng):
+    """The σ in SELL-C-σ: sorting packs similar rows → strictly less padding
+    than the unsorted SELL-C on a power-law matrix."""
+    A, _ = powerlaw_csr(rng, m=128)
+    unsorted = sellcs_from_csr(A, C=8, sigma=1)
+    sorted_ = sellcs_from_csr(A, C=8, sigma=128)
+    assert sorted_.padding_overhead() < unsorted.padding_overhead()
+
+
+def test_sellcs_handles_empty_rows_and_ragged_m(rng):
+    dense = np.zeros((13, 13), np.float32)  # 13 % C != 0
+    dense[3, [0, 5, 12]] = 1.0
+    dense[11, 2] = -2.0
+    A = CSRMatrix.fromdense(dense)
+    sc = sellcs_from_csr(A, C=8, sigma=4)
+    np.testing.assert_allclose(np.asarray(sc.todense()), dense, rtol=1e-6)
+    from repro.kernels.ref import spmv_sellcs
+    x = np.ones(13, np.float32)
+    np.testing.assert_allclose(
+        np.asarray(spmv_sellcs(sc, jnp.asarray(x))), dense @ x, rtol=1e-5, atol=1e-6
+    )
+
+
+# --- kernel vs ref across dtypes --------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("gather_mode", ["onehot", "take"])
+def test_sellcs_kernel_matches_ref(rng, dtype, gather_mode):
+    from repro.kernels import ops, ref
+
+    A, dense = powerlaw_csr(rng, m=64)
+    sc = sellcs_from_csr(A, C=8, sigma=16)
+    tiles = tiles_from_sellcs(sc)
+    x = rng.standard_normal(64).astype(np.float32)
+    xj = jnp.asarray(x, dtype)
+    y_kernel = ops.spmv_sellcs(tiles, xj, gather_mode=gather_mode, interpret=True)
+    y_ref = ref.spmv_sellcs(sc, jnp.asarray(x))
+    tol = dict(rtol=2e-4, atol=1e-4) if dtype == np.float32 else dict(rtol=0.1, atol=0.15)
+    np.testing.assert_allclose(
+        np.asarray(y_kernel, np.float32), np.asarray(y_ref, np.float32), **tol
+    )
+    if dtype == np.float32:
+        np.testing.assert_allclose(np.asarray(y_kernel), dense @ x, rtol=2e-4, atol=1e-4)
+
+
+# --- prepare(format="auto") end-to-end --------------------------------------
+
+
+def test_prepare_auto_regular_keeps_csrk_bitforbit(rng):
+    from repro.core.spmv import prepare
+
+    A = grid_laplacian_2d(16, 16)
+    auto = prepare(A, device="tpu_v5e", format="auto")
+    forced = prepare(A, device="tpu_v5e", format="csrk")
+    assert auto.backend == "csrk"
+    assert auto.stats is not None and auto.stats.is_regular
+    x = jnp.asarray(rng.standard_normal(A.n).astype(np.float32))
+    assert np.array_equal(np.asarray(auto(x)), np.asarray(forced(x)))
+
+
+def test_prepare_auto_irregular_routes_to_sellcs(rng):
+    from repro.core.spmv import prepare
+
+    A, dense = powerlaw_csr(rng, m=128)
+    op = prepare(A, device="tpu_v5e", format="auto")
+    assert op.backend == "sellcs"
+    assert op.stats.row_var > REGULAR_ROW_VAR_MAX
+    x = rng.standard_normal(128).astype(np.float32)
+    y = op(jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=2e-4, atol=1e-4)
+    # sellcs never permutes → apply_original is the same result
+    np.testing.assert_allclose(
+        np.asarray(op.apply_original(jnp.asarray(x))), dense @ x, rtol=2e-4, atol=1e-4
+    )
+
+
+def test_prepare_forced_sellcs_on_regular_matrix(rng):
+    from repro.core.spmv import prepare
+
+    A = grid_laplacian_2d(8, 8)
+    op = prepare(A, format="sellcs")
+    assert op.backend == "sellcs"
+    x = rng.standard_normal(A.n).astype(np.float32)
+    y = op(jnp.asarray(x))
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(A.todense()) @ x, rtol=2e-4, atol=1e-4
+    )
+    # CSR view is a CSR-k-only property
+    with pytest.raises(AttributeError):
+        _ = op.csr
+
+
+def test_prepare_unknown_format_raises(rng):
+    from repro.core.spmv import prepare
+
+    A = grid_laplacian_2d(4, 4)
+    with pytest.raises(ValueError):
+        prepare(A, format="ellpack-classic")
