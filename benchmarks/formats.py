@@ -35,10 +35,18 @@ def run(scale: int = 1024, ids=None) -> list:
         t_csr = time_fn(lambda v: ref.spmv_csr(A, v), x)
         t_coo = time_fn(lambda v, c=A.tocoo(): ref.spmv_coo(c, v), x)
 
-        op = prepare(A, device="tpu_v5e", reorder="bandk")
+        # this table is the CSR-k column — force it (auto may route small /
+        # irregular variants to SELL-C-σ; benchmarks/format_select.py covers that)
+        op = prepare(A, device="tpu_v5e", reorder="bandk", format="csrk")
         xr = x[jnp.asarray(op.perm)]
         tiles = op.tiles
-        t_csrk = time_fn(lambda v: ref.spmv_csrk_tiles(tiles, v), xr)
+        if tiles is not None:
+            t_csrk = time_fn(lambda v: ref.spmv_csrk_tiles(tiles, v), xr)
+        else:
+            # k == 2 tuning: the operator dispatches to the CSR-2 collapse
+            # (segmented CSR kernel) — time exactly what it would run.
+            csr_r = op.csr
+            t_csrk = time_fn(lambda v: ref.spmv_csr(csr_r, v), xr)
 
         try:
             ell = ell_from_csr(A)
@@ -68,7 +76,7 @@ def run(scale: int = 1024, ids=None) -> list:
             "csr5_gflops": round(gflops(A.nnz, t_csr5), 3),
             "relperf_vs_csr": round(relative_performance(t_csr, t_csrk), 1),
             "ell_pad_overhead": round(ell_oh, 2),
-            "csrk_pad_overhead": round(tiles.padding_overhead(), 3),
+            "csrk_pad_overhead": round(op.padding_overhead(), 3),
             "ssrs": op.params.ssrs,
             "srs": op.params.srs,
         })

@@ -1,23 +1,81 @@
 """Benchmark driver: one section per paper table/figure.
 
 ``python -m benchmarks.run [--quick]`` prints ``name,...`` CSV blocks.
+``--json PATH`` additionally writes every section's rows as machine-readable
+records ``{"section", "name", "value", "unit"}`` — the format the CI smoke
+step archives so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+Number = (int, float)
+
+
+def _unit(key: str) -> str:
+    """Infer the measurement unit from a row field name."""
+    if key.endswith("_us"):
+        return "us"
+    if "gflops" in key:
+        return "gflop/s"
+    if key.endswith("_pct") or "relperf" in key:
+        return "percent"  # before the overhead check: *_overhead_pct is ×100
+    if "overhead" in key or key.endswith("_frac"):
+        return "fraction"
+    if key == "speedup":
+        return "ratio"
+    if key in ("n", "nnz", "B", "iters", "devices", "halo"):
+        return "count"
+    return "scalar"
+
+
+def _flatten(section: str, result) -> list:
+    """Flatten a section's return value into {section, name, value, unit} rows.
+
+    Sections return either a list of row dicts (string/bool fields label the
+    row, numeric fields are measurements) or a plain dict of named scalars /
+    small tuples (e.g. the tuning-model fit coefficients).
+    """
+    records = []
+    if isinstance(result, dict):
+        result = [result]
+    if not isinstance(result, (list, tuple)):
+        return records
+    for row in result:
+        if not isinstance(row, dict):
+            continue
+        label = ".".join(
+            str(v) for v in row.values() if isinstance(v, (str, bool))
+        )
+        for key, val in row.items():
+            name = f"{label}.{key}" if label else key
+            if isinstance(val, Number) and not isinstance(val, bool):
+                records.append({"section": section, "name": name,
+                                "value": val, "unit": _unit(key)})
+            elif isinstance(val, (list, tuple)):
+                for i, item in enumerate(val):
+                    if isinstance(item, Number) and not isinstance(item, bool):
+                        records.append({"section": section, "name": f"{name}.{i}",
+                                        "value": item, "unit": _unit(key)})
+    return records
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller matrices")
     ap.add_argument("--only", default=None,
-                    help="comma list: formats,banding,overhead,constant_tuning,"
-                         "scaling,tuning_model,roofline")
+                    help="comma list: formats,spmm,banding,overhead,"
+                         "constant_tuning,scaling,tuning_model,roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write per-section rows as JSON records "
+                         '({"section", "name", "value", "unit"})')
     args = ap.parse_args()
-    scale = 2048 if args.quick else 1024
+    scale = 1024 if args.quick else 2048
     only = set(args.only.split(",")) if args.only else None
+    records = []
 
     def section(name):
         return only is None or name in only
@@ -26,31 +84,39 @@ def main() -> None:
     if section("formats"):
         print("## formats (paper Figs. 5/6/8/9)")
         from benchmarks import formats
-        formats.run(scale=scale)
+        records += _flatten("formats", formats.run(scale=scale))
+    if section("spmm"):
+        print("\n## spmm (multi-vector fast path: batched vs looped)")
+        from benchmarks import spmm
+        records += _flatten("spmm", spmm.run(scale=256 if args.quick else 1024))
     if section("overhead"):
         print("\n## overhead (paper Fig. 12)")
         from benchmarks import overhead
-        overhead.run(scale=scale)
+        records += _flatten("overhead", overhead.run(scale=scale))
     if section("banding"):
         print("\n## banding ablation (paper Fig. 7)")
         from benchmarks import banding
-        banding.run(scale=max(scale, 1024))
+        records += _flatten("banding", banding.run(scale=max(scale, 1024)))
     if section("constant_tuning"):
         print("\n## constant-time tuning penalty (paper Fig. 11)")
         from benchmarks import constant_tuning
-        constant_tuning.run(scale=max(scale, 1024))
+        records += _flatten("constant_tuning", constant_tuning.run(scale=max(scale, 1024)))
     if section("tuning_model"):
         print("\n## tuning-model calibration (paper Sec. 4)")
         from benchmarks import tuning_model
-        tuning_model.run(scale=max(scale, 1024))
+        records += _flatten("tuning_model", tuning_model.run(scale=max(scale, 1024)))
     if section("scaling"):
         print("\n## scalability (paper Fig. 10)")
         from benchmarks import scaling
-        scaling.run()
+        records += _flatten("scaling", scaling.run())
     if section("roofline"):
         print("\n## roofline (EXPERIMENTS §Roofline; from dry-run JSON)")
         from benchmarks import roofline
-        roofline.run()
+        records += _flatten("roofline", roofline.run())
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"\n# wrote {len(records)} records to {args.json}", file=sys.stderr)
     print(f"\n# total {time.time()-t0:.0f}s", file=sys.stderr)
 
 

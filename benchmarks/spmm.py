@@ -1,0 +1,113 @@
+"""Multi-vector SpMM vs looped SpMV — the batching-amortization claim.
+
+SpMV is bandwidth-bound (paper Fig. 1): streaming the matrix dominates the
+cost, so multiplying against a [n, B] block of right-hand sides should cost
+barely more than a single SpMV and far less than B looped calls — the CG /
+SELL-C-σ amortization argument that motivates the SpMM fast path.
+
+Two measurement modes per backend (csrk on a regular suite matrix, sellcs on
+a power-law irregular one):
+
+* ``oracle`` — the jit'd jnp tile-view computation (identical arithmetic and
+  memory layout to the Pallas kernel; the comparable wall-clock, as in
+  benchmarks/formats.py).
+* ``kernel`` — the Pallas ``interpret=True`` path at a small fixed scale.
+  Interpret mode executes the kernel body in Python per grid step, so its
+  absolute time is meaningless but the *ratio* is telling: batched SpMM runs
+  the same number of grid steps as one SpMV, while the loop runs B× as many.
+
+Rows: backend × impl × B with looped time, batched time and the speedup of
+batched over looped (>1 means batching pays).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, gflops, time_fn
+from benchmarks.format_select import powerlaw
+from repro.configs.spmv_suite import grid_laplacian_2d
+from repro.core.spmv import prepare
+from repro.kernels import ref
+
+
+def _loop_then_stack(fn, X):
+    """B explicit single-vector calls — the pre-SpMM consumer pattern."""
+    return jnp.stack([fn(X[:, i]) for i in range(X.shape[1])], axis=1)
+
+
+def _oracle_fns(op):
+    """Single-vector and batched jnp computations matching op's kernel path."""
+    if op.backend == "sellcs":
+        sell = op.sell
+        return (lambda v: ref.spmv_sellcs(sell, v)), (lambda X: ref.spmv_sellcs(sell, X))
+    tiles = op.tiles
+    return (lambda v: ref.spmv_csrk_tiles(tiles, v)), (
+        lambda X: ref.spmv_csrk_tiles(tiles, X)
+    )
+
+
+def _bench_case(name, op, nnz, X, impl, rows, *, warmup, iters):
+    if impl == "kernel":
+        mv, mm = op, op
+    else:
+        mv, mm = _oracle_fns(op)
+    B = X.shape[1]
+    t_loop = time_fn(lambda M: _loop_then_stack(mv, M), X, warmup=warmup, iters=iters)
+    t_batch = time_fn(mm, X, warmup=warmup, iters=iters)
+    rows.append({
+        "backend": name,
+        "impl": impl,
+        "B": f"B{B}",  # string so it labels the --json record name
+        "t_loop_us": round(t_loop * 1e6, 1),
+        "t_batch_us": round(t_batch * 1e6, 1),
+        "speedup": round(t_loop / max(t_batch, 1e-12), 2),
+        "batch_gflops": round(gflops(nnz * B, t_batch), 3),
+    })
+
+
+def run(scale: int = 1024, batches=(1, 4, 8, 16), kernel_scale: int = 20) -> list:
+    """Sweep B over both backends; ``kernel_scale`` sizes the interpret run."""
+    rng = np.random.default_rng(0)
+    side = max(int(np.sqrt(scale)), 8)
+    cases = [
+        ("csrk", prepare(grid_laplacian_2d(side, side), device="tpu_v5e",
+                         format="csrk")),
+        ("sellcs", prepare(powerlaw(max(scale, 256), scale=6.0, seed=3),
+                           device="tpu_v5e", format="sellcs")),
+    ]
+    rows = []
+    for name, op in cases:
+        A_nnz = op.sell.nnz if op.backend == "sellcs" else op.csrk.nnz
+        n = op.sell.n if op.backend == "sellcs" else op.csrk.n
+        for B in batches:
+            X = jnp.asarray(rng.standard_normal((n, B)), jnp.float32)
+            _bench_case(name, op, A_nnz, X, "oracle", rows, warmup=3, iters=10)
+
+    # interpret-mode kernel ratio at a deliberately tiny scale (see module doc)
+    k_cases = [
+        ("csrk", prepare(grid_laplacian_2d(kernel_scale, kernel_scale),
+                         device="tpu_v5e", format="csrk")),
+        ("sellcs", prepare(powerlaw(kernel_scale * kernel_scale, scale=4.0, seed=3),
+                           device="tpu_v5e", format="sellcs")),
+    ]
+    for name, op in k_cases:
+        A_nnz = op.sell.nnz if op.backend == "sellcs" else op.csrk.nnz
+        n = op.sell.n if op.backend == "sellcs" else op.csrk.n
+        for B in (1, 8):
+            X = jnp.asarray(rng.standard_normal((n, B)), jnp.float32)
+            _bench_case(name, op, A_nnz, X, "kernel", rows, warmup=1, iters=3)
+
+    emit(rows, ["backend", "impl", "B", "t_loop_us", "t_batch_us", "speedup",
+                "batch_gflops"])
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--scale", type=int, default=None)
+    args = ap.parse_args()
+    run(scale=args.scale or (256 if args.quick else 1024))

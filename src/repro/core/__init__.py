@@ -21,4 +21,5 @@ from repro.sparse import (  # noqa: F401
 )
 from repro.core.ordering import bandk, bandwidth, rcm  # noqa: F401
 from repro.core.tuner import TuningParams, tune, fit_log_model  # noqa: F401
-from repro.core.spmv import PreparedSpMV, prepare, spmv  # noqa: F401
+from repro.core.spmv import PreparedSpMV, prepare, spmm, spmv  # noqa: F401
+from repro.core.solvers import block_cg, block_power_iteration, cg  # noqa: F401

@@ -54,6 +54,60 @@ def cg(
     return CGResult(x=x, iters=k, residual=jnp.sqrt(rs))
 
 
+class BlockCGResult(NamedTuple):
+    X: jax.Array         # [n, B] solution block
+    iters: jax.Array     # scalar — iterations until every column converged
+    residual: jax.Array  # [B] per-column residual norms
+
+
+def block_cg(
+    matvec: MatVec,
+    B: jax.Array,
+    X0: jax.Array | None = None,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 500,
+) -> BlockCGResult:
+    """Conjugate gradients for SPD A with multiple right-hand sides.
+
+    Solves A X = B for B of shape [n, nrhs] with one *batched* matvec per
+    iteration: each column runs its own CG recurrence (per-column α/β keep
+    the method exactly CG, so converged columns simply freeze), but all
+    columns share a single SpMM A·P per step — the matrix is streamed once
+    per iteration instead of once per column, which is the whole point of
+    the multi-vector fast path.
+    """
+    if B.ndim != 2:
+        raise ValueError(f"block_cg expects B of shape [n, nrhs], got {B.shape}")
+    X0 = jnp.zeros_like(B) if X0 is None else X0
+    R0 = B - matvec(X0)
+    P0 = R0
+    rs0 = jnp.sum(R0 * R0, axis=0)                               # [nrhs]
+    tol2 = jnp.asarray(tol, B.dtype) ** 2 * jnp.maximum(
+        jnp.sum(B * B, axis=0), 1e-30
+    )
+
+    def cond(state):
+        _, _, _, rs, k = state
+        return jnp.logical_and(jnp.any(rs > tol2), k < maxiter)
+
+    def body(state):
+        X, R, P, rs, k = state
+        AP = matvec(P)                                           # one SpMM
+        active = (rs > tol2).astype(B.dtype)                     # freeze done cols
+        alpha = active * rs / jnp.maximum(jnp.sum(P * AP, axis=0), 1e-30)
+        X = X + alpha[None, :] * P
+        R = R - alpha[None, :] * AP
+        rs_new = jnp.sum(R * R, axis=0)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        P = jnp.where(active[None, :] > 0, R + beta[None, :] * P, P)
+        rs_new = jnp.where(active > 0, rs_new, rs)
+        return (X, R, P, rs_new, k + 1)
+
+    X, R, _, rs, k = jax.lax.while_loop(cond, body, (X0, R0, P0, rs0, 0))
+    return BlockCGResult(X=X, iters=k, residual=jnp.sqrt(rs))
+
+
 def power_iteration(
     matvec: MatVec, n: int, *, iters: int = 50, seed: int = 0
 ) -> jax.Array:
@@ -67,6 +121,29 @@ def power_iteration(
 
     v = jax.lax.fori_loop(0, iters, body, v)
     return jnp.vdot(v, matvec(v))
+
+
+def block_power_iteration(
+    matvec: MatVec, n: int, k: int, *, iters: int = 50, seed: int = 0
+) -> jax.Array:
+    """Top-k eigenvalue estimates via subspace (orthogonal) iteration.
+
+    One batched matvec (SpMM over a [n, k] block) per sweep followed by a QR
+    re-orthonormalisation; returns the k Rayleigh-quotient eigenvalues in
+    descending order.  Generalises :func:`power_iteration` (k = 1) while
+    streaming the matrix once per sweep for the whole subspace.
+    """
+    V = jax.random.normal(jax.random.PRNGKey(seed), (n, k))
+    V, _ = jnp.linalg.qr(V)
+
+    def body(_, V):
+        W = matvec(V)                                            # one SpMM
+        Q, _ = jnp.linalg.qr(W)
+        return Q
+
+    V = jax.lax.fori_loop(0, iters, body, V)
+    H = V.T @ matvec(V)                                          # [k, k] Rayleigh
+    return jnp.linalg.eigvalsh((H + H.T) / 2)[::-1]
 
 
 def jacobi_smoother(

@@ -70,6 +70,15 @@ class PreparedSpMV:
     sell_tiles: Optional[SELLCSTiles] = None
     stats: Optional[MatrixStats] = None
 
+    def __post_init__(self):
+        # Device-resident permutation arrays, built once at prepare() time so
+        # apply_original never re-uploads host numpy per call.  argsort gives
+        # the inverse permutation (inv[perm[i]] == i), turning the output
+        # scatter into a cheaper gather with bit-identical placement.
+        perm_host = np.asarray(self.perm)
+        object.__setattr__(self, "_perm_dev", jnp.asarray(perm_host))
+        object.__setattr__(self, "_inv_perm_dev", jnp.asarray(np.argsort(perm_host)))
+
     @property
     def csr(self) -> CSRMatrix:
         if self.csrk is None:
@@ -77,7 +86,13 @@ class PreparedSpMV:
         return self.csrk.csr
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        """SpMV in the *reordered* index space."""
+        """SpMV / SpMM in the *reordered* index space.
+
+        ``x`` may be a single vector ([n]) or a multi-vector block ([n, B]);
+        the batched form streams the matrix exactly once for all B columns
+        (SpMV is bandwidth-bound, so the extra right-hand sides are nearly
+        free — the SELL-C-σ/CG amortization argument).
+        """
         if self.backend == "sellcs":
             return kops.spmv_sellcs(
                 self.sell_tiles, x, gather_mode=self.gather_mode,
@@ -90,13 +105,20 @@ class PreparedSpMV:
         # CPU path (CSR-2): hierarchy collapses to the segmented CSR kernel;
         # super-rows drive the parallel partitioning, which XLA:CPU derives
         # from the segment structure.
+        if x.ndim == 2:
+            return kref.spmm_csr(self.csr, x)
         return kref.spmv_csr(self.csr, x)
 
+    def matmat(self, X: jax.Array) -> jax.Array:
+        """Explicit multi-vector alias: Y = A X for X of shape [n, B]."""
+        if X.ndim != 2:
+            raise ValueError(f"matmat expects a [n, B] block, got shape {X.shape}")
+        return self(X)
+
     def apply_original(self, x_old: jax.Array) -> jax.Array:
-        """SpMV for vectors indexed in the matrix's original ordering."""
-        perm = jnp.asarray(self.perm)
-        y_new = self(x_old[perm])
-        return jnp.zeros_like(y_new).at[perm].set(y_new)
+        """SpMV / SpMM for vectors indexed in the matrix's original ordering."""
+        y_new = self(x_old[self._perm_dev])
+        return y_new[self._inv_perm_dev]
 
     # -- introspection used by benchmarks ------------------------------------
     def overhead_fraction(self) -> float:
@@ -216,3 +238,10 @@ def prepare(
 def spmv(A: CSRMatrix, x: jax.Array) -> jax.Array:
     """One-shot CSR SpMV (no setup) — plain-CSR baseline."""
     return kref.spmv_csr(A, x)
+
+
+def spmm(A: CSRMatrix, X: jax.Array) -> jax.Array:
+    """One-shot CSR SpMM (no setup): Y = A X for X of shape [n, B]."""
+    if X.ndim != 2:
+        raise ValueError(f"spmm expects X of shape [n, B], got {X.shape}")
+    return kref.spmm_csr(A, X)

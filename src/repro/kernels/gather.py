@@ -27,9 +27,17 @@ def pick_chunk(S: int, chunk: int) -> int:
 def gather_onehot(src: jax.Array, idx: jax.Array, chunk: int) -> jax.Array:
     """Gather src[idx] as chunked one-hot matmuls (MXU-friendly).
 
-    src: [N] vector; idx: [S] int32 with S a multiple of 128. Returns [S]
-    float32.  Out-of-range idx rows produce 0 (no matching one-hot column).
+    src: [N] vector or [N, B] multi-vector block; idx: [S] int32 with S a
+    multiple of 128.  Returns [S] (resp. [S, B]) float32.  Out-of-range idx
+    rows produce 0 (no matching one-hot column).
+
+    The batched form builds each chunk's one-hot exactly once and multiplies
+    it against the whole [N, B] block — the one-hot construction (the
+    bandwidth-side cost of this idiom) is amortised over all B columns, which
+    is what makes multi-vector SpMM nearly free relative to B SpMV calls.
     """
+    if src.ndim == 2:
+        return _gather_onehot_batched(src, idx, chunk)
     (S,) = idx.shape
     (N,) = src.shape
     chunk = pick_chunk(S, chunk)
@@ -43,4 +51,26 @@ def gather_onehot(src: jax.Array, idx: jax.Array, chunk: int) -> jax.Array:
         return jax.lax.dynamic_update_slice(acc, g.astype(acc.dtype), (i * chunk,))
 
     acc0 = jnp.zeros((S,), jnp.float32)
+    return jax.lax.fori_loop(0, num_chunks, body, acc0)
+
+
+def _gather_onehot_batched(src: jax.Array, idx: jax.Array, chunk: int) -> jax.Array:
+    """Batched gather: src [N, B], idx [S] → [S, B] float32.
+
+    Identical chunking/one-hot structure to the vector path; the only change
+    is that the per-chunk matmul contracts against a [N, B] block.
+    """
+    (S,) = idx.shape
+    N, B = src.shape
+    chunk = pick_chunk(S, chunk)
+    num_chunks = S // chunk
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, N), 1)
+
+    def body(i, acc):
+        idx_c = jax.lax.dynamic_slice(idx, (i * chunk,), (chunk,))
+        onehot = (idx_c[:, None] == cols).astype(src.dtype)        # [chunk, N]
+        g = jnp.dot(onehot, src, preferred_element_type=jnp.float32)  # [chunk, B]
+        return jax.lax.dynamic_update_slice(acc, g.astype(acc.dtype), (i * chunk, 0))
+
+    acc0 = jnp.zeros((S, B), jnp.float32)
     return jax.lax.fori_loop(0, num_chunks, body, acc0)

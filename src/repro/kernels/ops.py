@@ -18,12 +18,22 @@ from repro.kernels.spmv_ell import spmv_ell_pallas
 from repro.kernels.spmv_sellcs import spmv_sellcs_pallas
 
 
+def _pad_rows(x: jax.Array, target: int) -> jax.Array:
+    """Zero-pad x along axis 0 to ``target`` rows ([n] and [n, B] alike).
+
+    Shared padding idiom for both kernel wrappers: the kernels only ever need
+    x extended with inert zeros on the leading (column-index) axis; any
+    trailing batch dimension rides along unpadded.
+    """
+    pad = [(0, target - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
 def _pad_x_to_blocks(x: jax.Array, window: int) -> jax.Array:
     """Pad x so every (win_block, win_block+1) pair addresses valid blocks."""
     n = x.shape[0]
     nblocks = -(-n // window)
-    target = (nblocks + 1) * window
-    return jnp.pad(x, (0, target - n))
+    return _pad_rows(x, (nblocks + 1) * window)
 
 
 def spmv_csrk(
@@ -34,7 +44,11 @@ def spmv_csrk(
     gather_chunk: int = 512,
     interpret: bool = True,
 ) -> jax.Array:
-    """CSR-k SpMV via the Pallas kernel (+ pure-jnp COO remainder pass)."""
+    """CSR-k SpMV via the Pallas kernel (+ pure-jnp COO remainder pass).
+
+    ``x`` may be a vector ([n]) or a multi-vector block ([n, B]); the batched
+    form streams the matrix tiles once for all B right-hand sides.
+    """
     xp = _pad_x_to_blocks(x, tiles.window)
     y = spmv_csrk_tiles_pallas(
         tiles.vals,
@@ -50,9 +64,10 @@ def spmv_csrk(
     )
     y = y[: tiles.shape[0]]
     if tiles.remainder_nnz:
-        y = y.at[tiles.rem_row].add(
-            tiles.rem_val.astype(y.dtype) * x[tiles.rem_col].astype(y.dtype)
-        )
+        rem_val = tiles.rem_val.astype(y.dtype)
+        if x.ndim == 2:
+            rem_val = rem_val[:, None]
+        y = y.at[tiles.rem_row].add(rem_val * x[tiles.rem_col].astype(y.dtype))
     return y
 
 
@@ -64,10 +79,16 @@ def spmv_sellcs(
     gather_chunk: int = 512,
     interpret: bool = True,
 ) -> jax.Array:
-    """SELL-C-σ SpMV via the Pallas kernel (+ scatter back to original rows)."""
-    m = tiles.shape[0]
-    n_pad = -(-x.shape[0] // 128) * 128
-    xp = jnp.pad(x, (0, n_pad - x.shape[0]))
+    """SELL-C-σ SpMV via the Pallas kernel (+ scatter back to original rows).
+
+    ``x`` may be a vector ([n]) or a multi-vector block ([n, B]).  x is padded
+    against the matrix's column extent (a static property of the prepared
+    operator) rounded to the 128-lane grid, so the padded size — and hence the
+    kernel's compiled signature — does not depend on the caller's vector.
+    """
+    m, n = tiles.shape
+    n_pad = -(-max(n, x.shape[0]) // 128) * 128
+    xp = _pad_rows(x, n_pad)
     y_sorted = spmv_sellcs_pallas(
         tiles.vals,
         tiles.col_idx,
@@ -77,7 +98,7 @@ def spmv_sellcs(
         interpret=interpret,
     )
     # σ-sorted order → original row order; C-alignment pad rows → dump row m
-    out = jnp.zeros((m + 1,), y_sorted.dtype)
+    out = jnp.zeros((m + 1,) + y_sorted.shape[1:], y_sorted.dtype)
     return out.at[tiles.row_perm].set(y_sorted)[:m]
 
 
@@ -96,3 +117,4 @@ def spmv_ell(mat: ELLMatrix, x: jax.Array, *, row_tile: int = 256, interpret: bo
 spmv_csrk_ref = ref.spmv_csrk_tiles
 spmv_ell_ref = ref.spmv_ell
 spmv_sellcs_ref = ref.spmv_sellcs
+spmm_csr_ref = ref.spmm_csr

@@ -93,7 +93,8 @@ def spmv_csrk_tiles(tiles: CSRkTiles, x: jax.Array) -> jax.Array:
     """Oracle for the padded-tile view consumed by the Pallas kernel.
 
     Computes, per tile t: y[t·R : (t+1)·R] = Σ_s vals[t,s] · x[win+lc[t,s]]
-    segment-summed by local_row, plus the COO remainder.
+    segment-summed by local_row, plus the COO remainder.  ``x`` may carry a
+    trailing batch dimension ([n, B] → [m, B]).
     """
     T, S = tiles.vals.shape
     R, W = tiles.rows_per_tile, tiles.window
@@ -102,8 +103,17 @@ def spmv_csrk_tiles(tiles: CSRkTiles, x: jax.Array) -> jax.Array:
     abs_col = jnp.minimum(
         tiles.win_block[:, None] * W + tiles.local_col, n - 1
     )
-    contrib = tiles.vals * x[abs_col]                      # [T, S]
     seg = tiles.local_row + (jnp.arange(T, dtype=jnp.int32) * R)[:, None]
+    if x.ndim == 2:
+        contrib = tiles.vals[..., None] * x[abs_col]       # [T, S, B]
+        y = jax.ops.segment_sum(
+            contrib.reshape(T * S, -1), seg.reshape(-1), num_segments=T * R
+        )
+        y = y[: tiles.shape[0]]
+        if tiles.remainder_nnz:
+            y = y.at[tiles.rem_row].add(tiles.rem_val[:, None] * x[tiles.rem_col])
+        return y
+    contrib = tiles.vals * x[abs_col]                      # [T, S]
     y = jax.ops.segment_sum(contrib.reshape(-1), seg.reshape(-1), num_segments=T * R)
     y = y[: tiles.shape[0]]
     if tiles.remainder_nnz:
@@ -117,8 +127,16 @@ def spmv_sellcs(mat: SELLCSMatrix, x: jax.Array) -> jax.Array:
     Per slot: contrib = vals · x[col]; slots are segment-summed by their
     σ-sorted row id, then scattered back to the original row order via
     ``row_perm`` (padding rows land in the dump row m and are dropped).
+    ``x`` may carry a trailing batch dimension ([n, B] → [m, B]).
     """
     m = mat.shape[0]
+    if x.ndim == 2:
+        contrib = mat.vals[:, None] * x[mat.col_idx]       # [slots, B]
+        y_sorted = jax.ops.segment_sum(
+            contrib, mat.slot_row, num_segments=mat.m_pad
+        )
+        out = jnp.zeros((m + 1, x.shape[1]), contrib.dtype)
+        return out.at[mat.row_perm].set(y_sorted)[:m]
     contrib = mat.vals * x[mat.col_idx]
     y_sorted = jax.ops.segment_sum(
         contrib, mat.slot_row, num_segments=mat.m_pad

@@ -16,6 +16,12 @@ scattered HBM access is the right trade on this hardware.
 
 Validated in ``interpret=True`` mode on CPU against ``ref.spmv_csrk_tiles``
 and ``ref.spmv_csr`` (tests/test_kernels.py sweeps shapes and dtypes).
+
+Requires ``jax.experimental.pallas.tpu.PrefetchScalarGridSpec`` (jax ≥ 0.4.x;
+CI pins 0.4.37) — the x-window placement needs scalar prefetch, and a plain
+``GridSpec`` cannot express it (an earlier try/except fallback to GridSpec
+could never have run: the operand list and index-map arity only fit the
+prefetch spec).
 """
 from __future__ import annotations
 
@@ -33,7 +39,11 @@ GatherMode = Literal["onehot", "take"]
 
 
 def _reduce_onehot(contrib: jax.Array, lr: jax.Array, rows: int) -> jax.Array:
-    """Segmented row reduction as a one-hot matmul: [S] → [rows]."""
+    """Segmented row reduction as a one-hot matmul: [S] → [rows].
+
+    ``contrib`` may carry a trailing batch dimension ([S, B] → [rows, B]);
+    the one-hot matrix is built once and shared across the batch.
+    """
     ridx = jax.lax.broadcasted_iota(jnp.int32, (rows, contrib.shape[0]), 0)
     onehot = (ridx == lr[None, :]).astype(contrib.dtype)            # [rows, S]
     return jnp.dot(onehot, contrib, preferred_element_type=jnp.float32)
@@ -66,6 +76,39 @@ def _kernel(
     y_ref[...] = y.astype(y_ref.dtype)
 
 
+def _kernel_batched(
+    win_ref,       # scalar-prefetch: [T] int32 window block indices (unused in body)
+    vals_ref,      # [1, S]
+    lc_ref,        # [1, S]
+    lr_ref,        # [1, S]
+    x1_ref,        # [window, B]
+    x2_ref,        # [window, B]
+    y_ref,         # [rows_per_tile, B]
+    *,
+    rows_per_tile: int,
+    gather_chunk: int,
+    gather_mode: GatherMode,
+):
+    """SpMM variant: same tile walk, x carries a trailing batch dimension.
+
+    The one-hot gather/reduce matrices are built once per chunk/tile and
+    contracted against the whole [·, B] block — the matrix stream (the
+    bandwidth-bound side) is read exactly once regardless of B.
+    """
+    del win_ref  # consumed by the BlockSpec index maps
+    xw = jnp.concatenate([x1_ref[...], x2_ref[...]], axis=0)        # [2W, B]
+    lc = lc_ref[0]
+    lr = lr_ref[0]
+    v = vals_ref[0]
+    if gather_mode == "take":
+        gathered = jnp.take(xw, lc, axis=0).astype(jnp.float32)     # [S, B]
+    else:
+        gathered = _gather_onehot(xw, lc, gather_chunk)             # [S, B]
+    contrib = v.astype(jnp.float32)[:, None] * gathered             # [S, B]
+    y = _reduce_onehot(contrib, lr, rows_per_tile)                  # [R, B]
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("rows_per_tile", "window", "gather_chunk", "gather_mode", "interpret"),
@@ -75,7 +118,7 @@ def spmv_csrk_tiles_pallas(
     local_col: jax.Array,  # [T, S]
     local_row: jax.Array,  # [T, S]
     win_block: jax.Array,  # [T]
-    x_padded: jax.Array,   # [(nblocks+1) * window] — padded by ops.py
+    x_padded: jax.Array,   # [(nblocks+1) * window] or [..., B] — padded by ops.py
     *,
     rows_per_tile: int,
     window: int,
@@ -83,10 +126,27 @@ def spmv_csrk_tiles_pallas(
     gather_mode: GatherMode = "onehot",
     interpret: bool = True,
 ) -> jax.Array:
-    """Run the CSR-k Pallas kernel over all tiles. Returns y of [T * R]."""
+    """Run the CSR-k Pallas kernel over all tiles.
+
+    ``x_padded`` may be a vector ([·]) or a multi-vector block ([·, B]);
+    returns y of [T * R] (resp. [T * R, B]).  The vector path is unchanged
+    from the single-RHS kernel (bit-for-bit).
+    """
+    if x_padded.ndim == 2:
+        return _spmm_csrk_tiles_pallas_batched(
+            vals, local_col, local_row, win_block, x_padded,
+            rows_per_tile=rows_per_tile, window=window,
+            gather_chunk=gather_chunk, gather_mode=gather_mode,
+            interpret=interpret,
+        )
     T, S = vals.shape
 
-    grid_spec = pl.GridSpec(
+    # Scalar-prefetch grid spec: win_block rides ahead of the grid so the
+    # x-window index maps can read it.
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(T,),
         in_specs=[
             pl.BlockSpec((1, S), lambda t, w: (t, 0)),
@@ -97,25 +157,6 @@ def spmv_csrk_tiles_pallas(
         ],
         out_specs=pl.BlockSpec((rows_per_tile,), lambda t, w: (t,)),
     )
-    # Scalar-prefetch grid spec: win_block rides ahead of the grid so the
-    # x-window index maps can read it.
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(T,),
-            in_specs=[
-                pl.BlockSpec((1, S), lambda t, w: (t, 0)),
-                pl.BlockSpec((1, S), lambda t, w: (t, 0)),
-                pl.BlockSpec((1, S), lambda t, w: (t, 0)),
-                pl.BlockSpec((window,), lambda t, w: (w[t],)),
-                pl.BlockSpec((window,), lambda t, w: (w[t] + 1,)),
-            ],
-            out_specs=pl.BlockSpec((rows_per_tile,), lambda t, w: (t,)),
-        )
-    except (ImportError, AttributeError):  # pragma: no cover - older jax
-        pass
 
     kernel = functools.partial(
         _kernel,
@@ -127,5 +168,52 @@ def spmv_csrk_tiles_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((T * rows_per_tile,), x_padded.dtype),
+        interpret=interpret,
+    )(win_block, vals, local_col, local_row, x_padded, x_padded)
+
+
+def _spmm_csrk_tiles_pallas_batched(
+    vals: jax.Array,       # [T, S]
+    local_col: jax.Array,  # [T, S]
+    local_row: jax.Array,  # [T, S]
+    win_block: jax.Array,  # [T]
+    x_padded: jax.Array,   # [(nblocks+1) * window, B]
+    *,
+    rows_per_tile: int,
+    window: int,
+    gather_chunk: int,
+    gather_mode: GatherMode,
+    interpret: bool,
+) -> jax.Array:
+    """Batched (SpMM) launch: identical grid/tile walk, x blocks gain a
+    trailing batch dimension.  Returns y of [T * R, B]."""
+    T, S = vals.shape
+    B = x_padded.shape[1]
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, S), lambda t, w: (t, 0)),
+            pl.BlockSpec((1, S), lambda t, w: (t, 0)),
+            pl.BlockSpec((1, S), lambda t, w: (t, 0)),
+            pl.BlockSpec((window, B), lambda t, w: (w[t], 0)),
+            pl.BlockSpec((window, B), lambda t, w: (w[t] + 1, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_tile, B), lambda t, w: (t, 0)),
+    )
+
+    kernel = functools.partial(
+        _kernel_batched,
+        rows_per_tile=rows_per_tile,
+        gather_chunk=gather_chunk,
+        gather_mode=gather_mode,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T * rows_per_tile, B), x_padded.dtype),
         interpret=interpret,
     )(win_block, vals, local_col, local_row, x_padded, x_padded)

@@ -31,10 +31,11 @@ from repro.kernels.gather import gather_onehot
 def _gather_onehot_2d(x: jax.Array, idx: jax.Array, chunk: int) -> jax.Array:
     """Gather x[idx] for a [C, W] index block via chunked one-hot matmuls.
 
-    x: [n_pad] padded vector; idx: [C, W] int32. Returns [C, W] float32.
+    x: [n_pad] padded vector or [n_pad, B] block; idx: [C, W] int32.
+    Returns [C, W] (resp. [C, W, B]) float32 — gather_onehot builds each
+    chunk's one-hot once and contracts it against all trailing columns.
     """
-    C, W = idx.shape
-    return gather_onehot(x, idx.reshape(-1), chunk).reshape(C, W)
+    return gather_onehot(x, idx.reshape(-1), chunk).reshape(idx.shape + x.shape[1:])
 
 
 def _kernel(
@@ -58,22 +59,64 @@ def _kernel(
     y_ref[...] = jnp.sum(contrib, axis=1).astype(y_ref.dtype)      # [C]
 
 
+def _kernel_batched(
+    vals_ref,   # [1, C, W]
+    col_ref,    # [1, C, W]
+    x_ref,      # [n_pad, B]
+    y_ref,      # [C, B]
+    *,
+    gather_chunk: int,
+    gather_mode: str,
+):
+    """SpMM variant: x carries a trailing batch dimension; the chunk's
+    vals/cols stream (the bandwidth-bound side) is read once for all B."""
+    vals = vals_ref[0]                                             # [C, W]
+    cols = col_ref[0]                                              # [C, W]
+    x = x_ref[...]                                                 # [n_pad, B]
+    if gather_mode == "take":
+        gathered = jnp.take(x, cols.reshape(-1), axis=0)
+        gathered = gathered.reshape(cols.shape + (x.shape[1],)).astype(jnp.float32)
+    else:
+        gathered = _gather_onehot_2d(x, cols, gather_chunk)        # [C, W, B]
+    contrib = vals.astype(jnp.float32)[..., None] * gathered       # [C, W, B]
+    y_ref[...] = jnp.sum(contrib, axis=1).astype(y_ref.dtype)      # [C, B]
+
+
 @functools.partial(
     jax.jit, static_argnames=("gather_chunk", "gather_mode", "interpret")
 )
 def spmv_sellcs_pallas(
     vals: jax.Array,     # [T, C, W]
     col_idx: jax.Array,  # [T, C, W]
-    x_padded: jax.Array, # [n_pad] — padded to a 128 multiple by ops.py
+    x_padded: jax.Array, # [n_pad] or [n_pad, B] — padded to a 128 multiple by ops.py
     *,
     gather_chunk: int = 512,
     gather_mode: str = "onehot",
     interpret: bool = True,
 ) -> jax.Array:
-    """Run the SELL-C-σ kernel over all chunks. Returns y of [T * C] in
-    σ-sorted row order (ops.py scatters back to the original ordering)."""
+    """Run the SELL-C-σ kernel over all chunks. Returns y of [T * C]
+    (resp. [T * C, B] for batched x) in σ-sorted row order (ops.py scatters
+    back to the original ordering).  The vector path is unchanged from the
+    single-RHS kernel (bit-for-bit)."""
     T, C, W = vals.shape
     n_pad = x_padded.shape[0]
+    if x_padded.ndim == 2:
+        B = x_padded.shape[1]
+        kernel = functools.partial(
+            _kernel_batched, gather_chunk=gather_chunk, gather_mode=gather_mode
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=(T,),
+            in_specs=[
+                pl.BlockSpec((1, C, W), lambda t: (t, 0, 0)),
+                pl.BlockSpec((1, C, W), lambda t: (t, 0, 0)),
+                pl.BlockSpec((n_pad, B), lambda t: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((C, B), lambda t: (t, 0)),
+            out_shape=jax.ShapeDtypeStruct((T * C, B), x_padded.dtype),
+            interpret=interpret,
+        )(vals, col_idx, x_padded)
     kernel = functools.partial(
         _kernel, gather_chunk=gather_chunk, gather_mode=gather_mode
     )
