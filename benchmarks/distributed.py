@@ -1,0 +1,131 @@
+"""Distributed SpMV sweep: shards × x-strategy × B (EXPERIMENTS §Distributed).
+
+Measures the sharded prepared operator (``prepare(A, mesh=...)``) against the
+single-device baseline on a forced multi-device CPU host platform, recording
+wall time and the modeled collective bytes — the O(band) halo vs O(n)
+all-gather argument in numbers.
+
+Standalone by design: the XLA host-device-count flag must be set *before*
+jax initialises, so this script cannot run inside ``benchmarks/run.py``'s
+process.  CI runs it as its own step:
+
+    PYTHONPATH=src python benchmarks/distributed.py --quick --json dist.json
+
+``--json`` writes the same ``{"section", "name", "value", "unit"}`` records
+as ``benchmarks/run.py`` (section ``"distributed"``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def run(scale: int = 1024, shards=(1, 2, 4), batches=(1, 8)) -> list:
+    """Sweep shards × strategy × B over a banded suite matrix.
+
+    Returns a list of row dicts (string fields label, numeric fields are the
+    measurements) in the shape ``benchmarks/run.py``'s flattener expects.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core.spmv import prepare
+    from repro.configs.spmv_suite import grid_laplacian_2d
+
+    def time_fn(fn, *args, warmup=3, iters=10):
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters
+
+    side = int(np.sqrt(scale))
+    A = grid_laplacian_2d(side, side)
+    rng = np.random.default_rng(0)
+    base = prepare(A, format="auto")
+    devices = jax.devices()
+    rows = []
+    for D in shards:
+        if D > len(devices):
+            print(f"# skipping shards={D}: only {len(devices)} devices")
+            continue
+        mesh = Mesh(np.asarray(devices[:D]).reshape(D, 1), ("data", "model"))
+        for strategy in ("replicated", "allgather", "halo"):
+            op = prepare(A, mesh=mesh, x_strategy=strategy)
+            for B in batches:
+                if B == 1:
+                    x = jnp.asarray(rng.standard_normal(A.n), jnp.float32)
+                else:
+                    x = jnp.asarray(
+                        rng.standard_normal((A.n, B)), jnp.float32
+                    )
+                t_sharded = time_fn(op, x)
+                t_single = time_fn(base, x)
+                y_err = float(jnp.abs(op(x) - base(x)).max())
+                rows.append({
+                    "matrix": f"lap2d_{side}x{side}",
+                    "strategy": f"{strategy}->{op.x_strategy}",
+                    "backend": op.backend,
+                    "shards": D,
+                    "B": B,
+                    "sharded_us": t_sharded * 1e6,
+                    "single_us": t_single * 1e6,
+                    "halo": op.halo,
+                    "collective_bytes": op.collective_bytes_per_call(B=B),
+                    "max_abs_err": y_err,
+                })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog="Results are exact (bit-for-bit vs single device); see "
+               "docs/distributed.md for the strategy model.",
+    )
+    ap.add_argument("--quick", action="store_true", help="smaller matrix")
+    ap.add_argument("--shards", default="1,2,4",
+                    help="comma list of shard counts (forces that many host "
+                         "devices; default 1,2,4)")
+    ap.add_argument("--batches", default="1,8",
+                    help="comma list of right-hand-side counts B")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help='also write records ({"section","name","value","unit"})')
+    args = ap.parse_args()
+    shards = tuple(int(s) for s in args.shards.split(","))
+
+    # must precede any jax import in this process; append so a pre-existing
+    # XLA_FLAGS (memory/debug flags) cannot silently disable the forcing —
+    # XLA honours the last occurrence of a repeated flag
+    flag = f"--xla_force_host_platform_device_count={max(shards)}"
+    os.environ["XLA_FLAGS"] = f"{os.environ.get('XLA_FLAGS', '')} {flag}".strip()
+    rows = run(
+        scale=1024 if args.quick else 4096,
+        shards=shards,
+        batches=tuple(int(b) for b in args.batches.split(",")),
+    )
+    header = ["matrix", "strategy", "backend", "shards", "B",
+              "sharded_us", "single_us", "halo", "collective_bytes",
+              "max_abs_err"]
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r[h]) for h in header))
+    if args.json:
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        from run import _flatten
+
+        records = _flatten("distributed", rows)
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {len(records)} records to {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -64,7 +64,15 @@ def _flatten(section: str, result) -> list:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=(
+            "The distributed sweep (shards × x-strategy × B over "
+            "prepare(A, mesh=...)) lives in benchmarks/distributed.py — it "
+            "must run as its own process to force a multi-device host "
+            "platform.  Docs: docs/architecture.md, docs/formats.md, "
+            "docs/tuning.md, docs/distributed.md."
+        ),
+    )
     ap.add_argument("--quick", action="store_true", help="smaller matrices")
     ap.add_argument("--only", default=None,
                     help="comma list: formats,spmm,banding,overhead,"

@@ -1,34 +1,60 @@
 """Distributed SpMV: row-partitioned A across the mesh (shard_map).
 
 The paper targets a single device; this is the framework layer that makes
-CSR-k a *cluster* citizen.  The matrix is Band-k reordered globally, rows are
-partitioned contiguously across the ``data`` axis (so each shard is itself a
-banded CSR-k matrix), and x is either
+CSR-k a *cluster* citizen.  Two levels live here:
 
-  * replicated (small n — iterative-solver regime), or
-  * row-sharded with a pre-SpMV all-gather that XLA can overlap with the
-    leading tiles' compute (collective term in the roofline).
+1. The low-level :class:`ShardedCSR` + ``dist_spmv_*`` functions: a plain
+   row-partitioned CSR executed with the pure-jnp oracle inside ``shard_map``
+   (the off-TPU fallback path, and the historical entry point).
 
-Because Band-k bounds each shard's column span, the all-gather can be replaced
-by a *halo exchange* (``halo_spmv``): shard d only needs x over its band
-window, i.e. its own slice plus ≤halo columns from each neighbour — an O(band)
-collective-permute instead of an O(n) all-gather.  This is the beyond-paper
-distributed optimisation evaluated in §Perf.
+2. The prepared-operator integration: :func:`shard_prepared` wraps a
+   single-device :class:`~repro.core.spmv.PreparedSpMV` into a
+   :class:`ShardedPreparedSpMV` that partitions the operator's *kernel tile
+   view* across the mesh and runs the actual Pallas CSR-k / SELL-C-σ kernels
+   inside ``shard_map``.  ``prepare(A, mesh=...)`` is the public spelling.
+
+Partitioning follows the Band-k argument: the matrix is reordered globally,
+rows (for CSR-k: whole kernel tiles; for SELL-C-σ: whole C-row chunks) are
+partitioned contiguously across the ``data`` axis, so each shard is itself a
+banded sub-operator.  x is then either
+
+  * **replicated** (small n — iterative-solver regime; no collective),
+  * **all-gather-x**: row-sharded with a pre-SpMV all-gather that XLA can
+    overlap with the leading tiles' compute (O(n) collective), or
+  * **halo-exchange-x**: because Band-k bounds each shard's column span,
+    shard d only needs x over its band window — its own slice plus ≤H columns
+    from each neighbour, an O(band) collective-permute instead of an O(n)
+    all-gather.  This is the beyond-paper distributed optimisation.
+
+:func:`select_x_strategy` picks between the three in O(1) from
+:class:`~repro.sparse.stats.MatrixStats` (band width vs n), mirroring the
+registry's constant-time format selection.
+
+Tile partitioning (not raw row partitioning) is what makes the sharded
+operator *bit-for-bit* identical to the single-device one: every kernel
+instance sees exactly the same tile contents, static block shapes and slot
+ordering as the global launch, so per-row floating-point summation order is
+unchanged.  ``tests/test_sharded_prepare.py`` pins this for both backends,
+[n] and [n, B] inputs, and all three x strategies.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.formats import CSRMatrix
 from repro.kernels import ref as kref
+from repro.kernels.ops import _pad_rows
+from repro.sparse.csrk import _round_up
+from repro.sparse.stats import MatrixStats, compute_shard_stats
+
+_LANE = 128
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,7 +70,16 @@ class ShardedCSR:
 
 
 def shard_csr(A: CSRMatrix, num_shards: int) -> ShardedCSR:
-    """Partition rows contiguously into ``num_shards`` padded shards."""
+    """Partition rows contiguously into ``num_shards`` padded shards.
+
+    Args:
+      A: the (already reordered) global CSR matrix.
+      num_shards: number of contiguous row blocks (mesh axis size).
+
+    Returns:
+      A :class:`ShardedCSR` whose stacked arrays have leading dimension
+      ``num_shards``; padding nnz slots carry ``vals == 0`` so they are inert.
+    """
     m, n = A.shape
     rp = np.asarray(A.row_ptr)
     ci = np.asarray(A.col_idx)
@@ -54,7 +89,7 @@ def shard_csr(A: CSRMatrix, num_shards: int) -> ShardedCSR:
     for d in range(num_shards):
         r0, r1 = d * rows_per_shard, min((d + 1) * rows_per_shard, m)
         max_nnz = max(max_nnz, int(rp[r1] - rp[r0]))
-    max_nnz = max(-(-max_nnz // 128) * 128, 128)
+    max_nnz = max(_round_up(max_nnz, _LANE), _LANE)
 
     s_rp = np.zeros((num_shards, rows_per_shard + 1), np.int32)
     s_ci = np.zeros((num_shards, max_nnz), np.int32)
@@ -79,7 +114,11 @@ def shard_csr(A: CSRMatrix, num_shards: int) -> ShardedCSR:
 
 
 def _local_spmv(row_ptr, col_idx, vals, x_full, col_offset=0):
-    """Segmented SpMV on one padded shard; padding rows produce 0."""
+    """Segmented SpMV on one padded shard; padding rows produce 0.
+
+    ``x_full`` may be a vector ([L]) or a multi-vector block ([L, B]); the
+    trailing batch dimension rides through the segment-sum unchanged.
+    """
     rows_per_shard = row_ptr.shape[0] - 1
     nnz = col_idx.shape[0]
     lengths = row_ptr[1:] - row_ptr[:-1]
@@ -87,14 +126,22 @@ def _local_spmv(row_ptr, col_idx, vals, x_full, col_offset=0):
         jnp.arange(rows_per_shard, dtype=jnp.int32), lengths, total_repeat_length=nnz
     )
     # padded slots repeat the last row; their vals are 0 so they are inert
-    contrib = vals * jnp.take(x_full, col_idx - col_offset, mode="clip")
+    gathered = jnp.take(x_full, col_idx - col_offset, axis=0, mode="clip")
+    if x_full.ndim == 2:
+        contrib = vals[:, None] * gathered
+    else:
+        contrib = vals * gathered
     return jax.ops.segment_sum(contrib, rows, num_segments=rows_per_shard)
 
 
 def dist_spmv_allgather(A: ShardedCSR, x: jax.Array, mesh: Mesh, axis: str = "data"):
-    """y = A x with x row-sharded; all-gather x then local SpMV (baseline)."""
+    """y = A x with x row-sharded; all-gather x then local SpMV (baseline).
+
+    ``x`` may be [n] or [n, B]; the collective moves the whole padded x
+    (O(n·B) bytes) regardless of the band structure.
+    """
     D = mesh.shape[axis]
-    xpad = jnp.pad(x, (0, A.rows_per_shard * D - x.shape[0]))
+    xpad = _pad_rows(x, A.rows_per_shard * D)
 
     def body(rp, ci, vl, x_shard):
         x_full = jax.lax.all_gather(x_shard, axis, tiled=True)
@@ -115,15 +162,15 @@ def dist_spmv_halo(A: ShardedCSR, x: jax.Array, mesh: Mesh, axis: str = "data"):
     """Banded halo exchange: neighbours swap ≤halo columns (beyond-paper opt).
 
     Valid when ``A.halo <= A.rows_per_shard`` (guaranteed by Band-k for the
-    suites we run; checked at trace time).
+    suites we run; checked at trace time).  ``x`` may be [n] or [n, B].
     """
     D = mesh.shape[axis]
     R = A.rows_per_shard
-    H = -(-max(A.halo, 1) // 128) * 128
+    H = _round_up(max(A.halo, 1), _LANE)
     if H > R:
         # band too wide for single-neighbour halo — fall back
         return dist_spmv_allgather(A, x, mesh, axis)
-    xpad = jnp.pad(x, (0, R * D - x.shape[0]))
+    xpad = _pad_rows(x, R * D)
 
     def body(rp, ci, vl, x_shard):
         idx = jax.lax.axis_index(axis)
@@ -146,3 +193,479 @@ def dist_spmv_halo(A: ShardedCSR, x: jax.Array, mesh: Mesh, axis: str = "data"):
     )
     y = f(A.row_ptr, A.col_idx, A.vals, xpad)
     return y[: A.shape[0]]
+
+
+# ---------------------------------------------------------------------------
+# prepared-operator integration: prepare(A, mesh=...) → ShardedPreparedSpMV
+# ---------------------------------------------------------------------------
+
+X_STRATEGIES = ("replicated", "allgather", "halo")
+
+#: Below this n, replicating x everywhere is cheaper than any collective
+#: bookkeeping (the iterative-solver regime the paper motivates with).
+REPLICATE_N_MAX = 1 << 14
+
+
+def select_x_strategy(
+    stats: MatrixStats, num_shards: int, rows_per_shard: int
+) -> str:
+    """O(1) x-distribution choice from matrix statistics (band width vs n).
+
+    The decision mirrors the registry's constant-time format selection: no
+    SpMV is ever run, only the one-pass :class:`MatrixStats` are consulted.
+
+    Policy (first match wins):
+
+    * one shard → ``"replicated"`` (nothing to distribute);
+    * ``round_up(bandwidth, 128) ≤ rows_per_shard`` → ``"halo"`` — Band-k
+      bounds every shard's column overhang by the bandwidth, so an O(band)
+      neighbour exchange suffices;
+    * ``n ≤ REPLICATE_N_MAX`` → ``"replicated"`` — x is small enough that
+      keeping a full copy per device beats collective latency;
+    * otherwise → ``"allgather"`` — wide band *and* large n: each shard may
+      read far-away columns, so gather the whole x.
+
+    Args:
+      stats: one-pass statistics of the (post-reordering) global matrix.
+      num_shards: mesh axis size the rows are partitioned over.
+      rows_per_shard: padded rows each shard owns.
+
+    Returns:
+      One of ``"replicated" | "allgather" | "halo"``.
+    """
+    if num_shards <= 1:
+        return "replicated"
+    if _round_up(max(int(stats.bandwidth), 1), _LANE) <= rows_per_shard:
+        return "halo"
+    if stats.n <= REPLICATE_N_MAX:
+        return "replicated"
+    return "allgather"
+
+
+def _stack_shards(a: np.ndarray, D: int, per: int) -> jax.Array:
+    """Stack a leading-dim array into [D, per, ...] with zero padding."""
+    a = np.asarray(a)
+    out = np.zeros((D * per,) + a.shape[1:], a.dtype)
+    out[: a.shape[0]] = a
+    return jnp.asarray(out.reshape((D, per) + a.shape[1:]))
+
+
+def _required_halo(
+    real_cols_per_shard: list, rows_per_shard: int, num_shards: int
+) -> int:
+    """Max column overhang of any shard's *real* (val ≠ 0) entries, in rows.
+
+    Padding slots multiply by 0 and are inert, so only real columns constrain
+    the halo window — this is what lets the halo stay O(band) even though the
+    kernels' BlockSpec windows are 128-aligned.
+    """
+    H = 0
+    for d, cols in enumerate(real_cols_per_shard):
+        if cols is None or len(cols) == 0:
+            continue
+        r0, r1 = d * rows_per_shard, (d + 1) * rows_per_shard
+        H = max(H, r0 - int(cols.min()), int(cols.max()) + 1 - r1)
+    return max(H, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPreparedSpMV:
+    """A prepared SpMV operator partitioned across a device mesh.
+
+    Built by :func:`shard_prepared` (or ``prepare(A, mesh=...)``).  The global
+    operator's kernel tile view is split into contiguous per-shard stacks and
+    executed with the *same* Pallas kernels inside ``shard_map``, so results
+    are bit-for-bit identical to the single-device ``base`` operator.
+
+    Shapes: ``__call__`` accepts ``x`` of shape [n] or [n, B] (reordered index
+    space) and returns [m] resp. [m, B]; ``apply_original`` works in the
+    matrix's original index space, exactly like :class:`PreparedSpMV`.
+
+    Attributes:
+      base: the single-device :class:`~repro.core.spmv.PreparedSpMV` the
+        shard view was derived from (source of truth for perm/params/stats).
+      mesh / axis: the mesh and the axis name rows are partitioned over.
+      num_shards: mesh axis size D.
+      x_strategy: the *resolved* x distribution ("replicated" | "allgather" |
+        "halo"); ``x_strategy_requested`` records what the caller asked for
+        (halo demotes to allgather when the actual column reach of a shard
+        exceeds one neighbour's rows).
+      rows_per_shard: padded kernel-space rows per shard (tile granular).
+      halo: exchanged rows per neighbour (0 unless strategy is "halo").
+      shard_stats / shard_backends: per-shard one-pass statistics and the
+        registry's per-shard format decisions — recorded for introspection
+        and benchmarks; execution uses the uniform ``backend`` so the SPMD
+        body (and the bit-for-bit contract with ``base``) stays single-program.
+    """
+
+    base: "object"                    # PreparedSpMV (kept untyped: no cycle)
+    mesh: Mesh
+    axis: str
+    num_shards: int
+    x_strategy: str
+    x_strategy_requested: str
+    rows_per_shard: int
+    halo: int
+    shard_stats: Tuple[Optional[MatrixStats], ...]
+    shard_backends: Tuple[str, ...]
+    # stacked per-shard kernel arrays (backend-dependent)
+    t_vals: Optional[jax.Array] = None    # csrk: [D, Tp, S]
+    t_lcol: Optional[jax.Array] = None    # csrk: [D, Tp, S]
+    t_lrow: Optional[jax.Array] = None    # csrk: [D, Tp, S]
+    t_win: Optional[jax.Array] = None     # csrk: [D, Tp]
+    s_vals: Optional[jax.Array] = None    # sellcs: [D, Tp, C, W]
+    s_cols: Optional[jax.Array] = None    # sellcs: [D, Tp, C, W]
+    c_csr: Optional[ShardedCSR] = None    # csr2 fallback (oracle path)
+
+    def __post_init__(self):
+        object.__setattr__(self, "_call_cache", {})
+
+    # -- delegated introspection --------------------------------------------
+    @property
+    def backend(self) -> str:
+        """The executing backend ("csrk" | "sellcs") — the global decision."""
+        return self.base.backend
+
+    @property
+    def stats(self):
+        """Global :class:`MatrixStats` (post-reordering) of the base operator."""
+        return self.base.stats
+
+    @property
+    def perm(self) -> np.ndarray:
+        return self.base.perm
+
+    @property
+    def params(self):
+        return self.base.params
+
+    def collective_bytes_per_call(self, B: int = 1, itemsize: int = 4) -> int:
+        """Modeled bytes moved by the x collective per SpMV/SpMM call.
+
+        halo: 2·H rows to each neighbour per shard; allgather: every shard
+        receives the other D−1 shards' rows; replicated: 0 (x is already
+        everywhere).  This is the quantity ``benchmarks/distributed.py``
+        records — the O(band) vs O(n) argument in numbers.
+        """
+        D, R = self.num_shards, self.rows_per_shard
+        per_row = itemsize * max(B, 1)
+        if self.x_strategy == "halo":
+            return 2 * self.halo * D * per_row
+        if self.x_strategy == "allgather":
+            return (D - 1) * R * D * per_row
+        return 0
+
+    # -- execution -----------------------------------------------------------
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Sharded SpMV / SpMM in the reordered index space ([n] or [n, B])."""
+        fn = self._call_cache.get("call")
+        if fn is None:
+            fn = _build_sharded_call(self)
+            self._call_cache["call"] = fn
+        return fn(x)
+
+    def matmat(self, X: jax.Array) -> jax.Array:
+        """Explicit multi-vector alias: Y = A X for X of shape [n, B]."""
+        if X.ndim != 2:
+            raise ValueError(f"matmat expects a [n, B] block, got shape {X.shape}")
+        return self(X)
+
+    def apply_original(self, x_old: jax.Array) -> jax.Array:
+        """SpMV / SpMM for vectors indexed in the matrix's original ordering."""
+        y_new = self(x_old[self.base._perm_dev])
+        return y_new[self.base._inv_perm_dev]
+
+
+def _build_sharded_call(op: ShardedPreparedSpMV):
+    """Build the jitted shard_map executor for one ShardedPreparedSpMV.
+
+    Everything static (strategy, halo size, tile shapes, mesh) is closed
+    over; the stacked arrays and x are passed as arguments so jit does not
+    bake them in as constants.  The returned callable accepts x of shape
+    [n] or [n, B].
+    """
+    mesh, axis, D = op.mesh, op.axis, op.num_shards
+    strategy, H, Rs = op.x_strategy, op.halo, op.rows_per_shard
+    base = op.base
+    m = base.csrk.shape[0] if base.backend == "csrk" else base.sell.shape[0]
+
+    def distribute_x(xs, target_len):
+        """Inside-body reconstruction of the (padded) full x from the local
+        shard, per strategy; returns an array of ``target_len`` rows whose
+        values match the single-device padded x at every *real* column."""
+        if strategy == "replicated":
+            return xs
+        trail = xs.shape[1:]
+        if strategy == "allgather":
+            xfull = jax.lax.all_gather(xs, axis, tiled=True)        # [D*Rs,...]
+            ext = jnp.zeros((max(target_len, D * Rs),) + trail, xs.dtype)
+            ext = jax.lax.dynamic_update_slice(
+                ext, xfull, (0,) * ext.ndim
+            )
+            return ext[:target_len]
+        # halo: swap H rows with each neighbour, paste the window into a
+        # zero vector at its absolute offset.  Columns outside the window
+        # are only ever touched by val==0 padding slots (inert by the
+        # _required_halo construction), so zeros there preserve bit-equality.
+        d = jax.lax.axis_index(axis)
+        left = jax.lax.ppermute(
+            xs[-H:], axis, [(i, (i + 1) % D) for i in range(D)]
+        )
+        right = jax.lax.ppermute(
+            xs[:H], axis, [(i, (i - 1) % D) for i in range(D)]
+        )
+        xwin = jnp.concatenate([left, xs, right])   # rows [d·Rs−H, d·Rs+Rs+H)
+        ext_len = H + max(target_len, D * Rs + H)
+        ext = jnp.zeros((ext_len,) + trail, xs.dtype)
+        start = (d * Rs,) + (0,) * len(trail)
+        ext = jax.lax.dynamic_update_slice(ext, xwin, start)
+        return ext[H : H + target_len]
+
+    x_spec = P() if strategy == "replicated" else P(axis)
+
+    if base.backend == "csrk" and base.tiles is not None:
+        from repro.kernels.spmv_csrk import spmv_csrk_tiles_pallas
+
+        tiles = base.tiles
+        R, W = tiles.rows_per_tile, tiles.window
+        nblocks = -(-tiles.shape[1] // W)
+        Lp = (nblocks + 1) * W
+        gather_mode, interpret = base.gather_mode, base.interpret
+
+        def body(v, lc, lr, wb, xs):
+            xp = distribute_x(xs, Lp)
+            return spmv_csrk_tiles_pallas(
+                v[0], lc[0], lr[0], wb[0], xp,
+                rows_per_tile=R, window=W,
+                gather_mode=gather_mode, interpret=interpret,
+            )
+
+        f = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(axis), x_spec),
+            out_specs=P(axis), check_rep=False,
+        )
+        rem = tiles.remainder_nnz
+        rem_row, rem_col, rem_val = tiles.rem_row, tiles.rem_col, tiles.rem_val
+
+        def call(tv, tlc, tlr, twin, x):
+            xin = _pad_rows(x, Lp if strategy == "replicated" else D * Rs)
+            y = f(tv, tlc, tlr, twin, xin)[:m]
+            if rem:
+                rv = rem_val.astype(y.dtype)
+                if x.ndim == 2:
+                    rv = rv[:, None]
+                y = y.at[rem_row].add(rv * x[rem_col].astype(y.dtype))
+            return y
+
+        jitted = jax.jit(call)
+        return lambda x: jitted(op.t_vals, op.t_lcol, op.t_lrow, op.t_win, x)
+
+    if base.backend == "sellcs":
+        from repro.kernels.spmv_sellcs import spmv_sellcs_pallas
+
+        st = base.sell_tiles
+        n_pad = _round_up(max(st.shape[1], 1), _LANE)
+        m_pad = int(st.row_perm.shape[0])
+        row_perm = st.row_perm
+        gather_mode, interpret = base.gather_mode, base.interpret
+
+        def body(v, c, xs):
+            xp = distribute_x(xs, n_pad)
+            return spmv_sellcs_pallas(
+                v[0], c[0], xp, gather_mode=gather_mode, interpret=interpret
+            )
+
+        f = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis), P(axis), x_spec),
+            out_specs=P(axis), check_rep=False,
+        )
+
+        def call(sv, sc, x):
+            xin = _pad_rows(x, n_pad if strategy == "replicated" else D * Rs)
+            y_sorted = f(sv, sc, xin)[:m_pad]     # σ-sorted row order
+            out = jnp.zeros((m + 1,) + y_sorted.shape[1:], y_sorted.dtype)
+            return out.at[row_perm].set(y_sorted)[:m]
+
+        jitted = jax.jit(call)
+        return lambda x: jitted(op.s_vals, op.s_cols, x)
+
+    # CSR-2 / CPU fallback: pure-jnp oracle inside shard_map (no tile view).
+    S = op.c_csr
+
+    def body(rp, ci, vl, xs):
+        if strategy == "halo":
+            d = jax.lax.axis_index(axis)
+            left = jax.lax.ppermute(
+                xs[-H:], axis, [(i, (i + 1) % D) for i in range(D)]
+            )
+            right = jax.lax.ppermute(
+                xs[:H], axis, [(i, (i - 1) % D) for i in range(D)]
+            )
+            x_win = jnp.concatenate([left, xs, right])
+            return _local_spmv(rp[0], ci[0], vl[0], x_win,
+                               col_offset=d * Rs - H)
+        if strategy == "allgather":
+            x_full = jax.lax.all_gather(xs, axis, tiled=True)
+        else:
+            x_full = xs
+        return _local_spmv(rp[0], ci[0], vl[0], x_full)
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), x_spec),
+        out_specs=P(axis), check_rep=False,
+    )
+
+    def call(rp, ci, vl, x):
+        xin = x if strategy == "replicated" else _pad_rows(x, D * Rs)
+        return f(rp, ci, vl, xin)[:m]
+
+    jitted = jax.jit(call)
+    return lambda x: jitted(S.row_ptr, S.col_idx, S.vals, x)
+
+
+def shard_prepared(
+    base,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    x_strategy: str = "auto",
+    A: CSRMatrix | None = None,
+) -> ShardedPreparedSpMV:
+    """Partition a single-device :class:`PreparedSpMV` across ``mesh``.
+
+    This is the setup half of the distributed layer (``prepare(A, mesh=...)``
+    calls it).  The base operator's kernel tile view is split into contiguous
+    per-shard stacks — CSR-k: whole SSR tiles; SELL-C-σ: whole C-row chunks;
+    CSR-2 (CPU): raw row blocks — so every shard runs the *same* kernel with
+    the same static shapes as the global launch (the bit-for-bit property).
+
+    Args:
+      base: the prepared single-device operator (any backend).
+      mesh: the device mesh; rows are partitioned over ``axis``.
+      axis: mesh axis name (default ``"data"``).
+      x_strategy: ``"auto"`` (O(1) :func:`select_x_strategy` from the base
+        stats), or one of ``"replicated" | "allgather" | "halo"``.  A halo
+        request is demoted to allgather when a shard's real column reach
+        exceeds one neighbour's rows (recorded in ``x_strategy_requested``).
+      A: the source matrix in the *base operator's* index space (reordered
+        for CSR-k, original for SELL-C-σ); used only to compute per-shard
+        statistics for the registry's per-shard format decisions.  Falls back
+        to the operator's own CSR view when available.
+
+    Returns:
+      A :class:`ShardedPreparedSpMV`; call it like the base operator.
+    """
+    if x_strategy not in ("auto",) + X_STRATEGIES:
+        raise ValueError(
+            f"unknown x_strategy {x_strategy!r} (expected auto|" +
+            "|".join(X_STRATEGIES) + ")"
+        )
+    D = int(mesh.shape[axis])
+
+    kw = dict(base=base, mesh=mesh, axis=axis, num_shards=D)
+    real_cols = []
+
+    if base.backend == "csrk" and base.tiles is not None:
+        tiles = base.tiles
+        T, R = tiles.num_tiles, tiles.rows_per_tile
+        W = tiles.window
+        Tp = -(-T // D)
+        Rs = Tp * R
+        v = np.asarray(tiles.vals)
+        lc = np.asarray(tiles.local_col)
+        wb = np.asarray(tiles.win_block)
+        for d in range(D):
+            t0, t1 = d * Tp, min((d + 1) * Tp, T)
+            cols = [
+                wb[t] * W + lc[t][v[t] != 0]
+                for t in range(t0, t1)
+                if (v[t] != 0).any()
+            ]
+            real_cols.append(np.concatenate(cols) if cols else None)
+        kw.update(
+            rows_per_shard=Rs,
+            t_vals=_stack_shards(v, D, Tp),
+            t_lcol=_stack_shards(lc, D, Tp),
+            t_lrow=_stack_shards(np.asarray(tiles.local_row), D, Tp),
+            t_win=_stack_shards(wb, D, Tp),
+        )
+        src = A if A is not None else base.csrk.csr
+    elif base.backend == "sellcs":
+        st = base.sell_tiles
+        T, C = st.vals.shape[0], st.vals.shape[1]
+        Tp = -(-T // D)
+        Rs = Tp * C
+        v = np.asarray(st.vals)
+        c = np.asarray(st.col_idx)
+        for d in range(D):
+            t0, t1 = d * Tp, min((d + 1) * Tp, T)
+            mask = v[t0:t1] != 0
+            real_cols.append(c[t0:t1][mask] if mask.any() else None)
+        kw.update(
+            rows_per_shard=Rs,
+            s_vals=_stack_shards(v, D, Tp),
+            s_cols=_stack_shards(c, D, Tp),
+        )
+        src = A
+    else:
+        # CSR-2 fallback: no tile view — raw row partitioning + oracle.
+        src = A if A is not None else base.csrk.csr
+        sh = shard_csr(src, D)
+        Rs = sh.rows_per_shard
+        rp = np.asarray(sh.row_ptr)
+        ci = np.asarray(sh.col_idx)
+        vl = np.asarray(sh.vals)
+        for d in range(D):
+            k = int(rp[d, -1])
+            real_cols.append(ci[d, :k][vl[d, :k] != 0] if k else None)
+        kw.update(rows_per_shard=Rs, c_csr=sh)
+
+    # -- per-shard statistics + registry decisions (introspection) ----------
+    # Uses the operator's actual (tile-granular) row partition, so the
+    # recorded decisions describe the rows each shard really executes.
+    # (SELL-C-σ shards own *σ-sorted* row blocks; the σ-window sort moves
+    # rows at most σ positions, so the original-order block is the honest
+    # host-side approximation.)
+    if src is not None:
+        from repro.sparse.registry import select_format
+
+        shard_stats = compute_shard_stats(src, D, rows_per_shard=Rs)
+        shard_backends = tuple(
+            select_format(s, base.device) for s in shard_stats
+        )
+    else:
+        shard_stats = (None,) * D
+        shard_backends = (base.backend,) * D
+
+    # -- x strategy resolution ----------------------------------------------
+    stats = base.stats
+    if stats is None and src is not None:
+        from repro.sparse.stats import compute_stats
+
+        stats = compute_stats(src)
+    requested = x_strategy
+    if x_strategy == "auto":
+        if stats is not None:
+            x_strategy = select_x_strategy(stats, D, Rs)
+        else:
+            x_strategy = "allgather"
+    halo = 0
+    if x_strategy == "halo":
+        H_req = _required_halo(real_cols, Rs, D)
+        halo = max(_round_up(max(H_req, 1), _LANE), _LANE)
+        if halo > Rs:
+            # a shard reaches beyond its neighbours — halo cannot be exchanged
+            # with a single ppermute pair; fall back to the O(n) gather.
+            x_strategy, halo = "allgather", 0
+
+    return ShardedPreparedSpMV(
+        x_strategy=x_strategy,
+        x_strategy_requested=requested,
+        halo=halo,
+        shard_stats=tuple(shard_stats),
+        shard_backends=shard_backends,
+        **kw,
+    )

@@ -1,6 +1,7 @@
-"""Back-compat shim — the format containers now live in :mod:`repro.sparse`.
+"""Back-compat import shim — this module holds no code of its own.
 
-The original 697-line monolith was split into a package:
+The sparse containers live in the :mod:`repro.sparse` package
+(see docs/architecture.md for the layer map):
 
 * ``repro.sparse.coo`` / ``repro.sparse.csr``   — COO, CSR
 * ``repro.sparse.csrk``                          — CSR-k + TPU tile view
@@ -8,8 +9,8 @@ The original 697-line monolith was split into a package:
 * ``repro.sparse.baselines``                     — ELL, BCSR, CSR5-like
 * ``repro.sparse.stats`` / ``repro.sparse.registry`` — stats + auto-selection
 
-Every public name keeps importing from here; new code should import from
-``repro.sparse`` directly.
+This shim only re-exports those names so pre-split imports keep working;
+new code should import from ``repro.sparse`` directly.
 """
 from repro.sparse import (  # noqa: F401
     BCSRMatrix,

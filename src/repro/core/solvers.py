@@ -1,9 +1,12 @@
 """Iterative solvers on top of SpMV — the paper's motivating workload (CG).
 
 The solvers are written against an abstract ``matvec`` so they run identically
-over the plain CSR oracle, the Pallas CSR-k operator, or the distributed
-shard_map operators; that interchangeability is itself a test of the format's
-"no conversion needed" claim.
+over the plain CSR oracle, the Pallas CSR-k operator, or the sharded
+``prepare(A, mesh=...)`` operator (docs/distributed.md); that
+interchangeability is itself a test of the format's "no conversion needed"
+claim.  Block variants (``block_cg``, ``block_power_iteration``) issue one
+*batched* matvec per iteration, so they ride the [n, B] SpMM fast path on
+every backend, single-device or sharded.
 """
 from __future__ import annotations
 
@@ -29,7 +32,20 @@ def cg(
     tol: float = 1e-6,
     maxiter: int = 500,
 ) -> CGResult:
-    """Conjugate gradients for SPD A (paper Sec. 1: the SpMV consumer)."""
+    """Conjugate gradients for SPD A (paper Sec. 1: the SpMV consumer).
+
+    Args:
+      matvec: y = A x for x of shape [n] (any prepared/sharded operator or
+        oracle closure works).
+      b: right-hand side, shape [n].
+      x0: optional initial guess, shape [n] (defaults to zeros).
+      tol: relative residual tolerance (on ‖r‖ / ‖b‖).
+      maxiter: iteration cap.
+
+    Returns:
+      :class:`CGResult` with the solution ``x`` [n], iteration count and the
+      final residual norm.
+    """
     x0 = jnp.zeros_like(b) if x0 is None else x0
     r0 = b - matvec(x0)
     p0 = r0
@@ -70,12 +86,22 @@ def block_cg(
 ) -> BlockCGResult:
     """Conjugate gradients for SPD A with multiple right-hand sides.
 
-    Solves A X = B for B of shape [n, nrhs] with one *batched* matvec per
-    iteration: each column runs its own CG recurrence (per-column α/β keep
-    the method exactly CG, so converged columns simply freeze), but all
-    columns share a single SpMM A·P per step — the matrix is streamed once
-    per iteration instead of once per column, which is the whole point of
-    the multi-vector fast path.
+    Solves A X = B with one *batched* matvec per iteration: each column runs
+    its own CG recurrence (per-column α/β keep the method exactly CG, so
+    converged columns simply freeze), but all columns share a single SpMM
+    A·P per step — the matrix is streamed once per iteration instead of once
+    per column, which is the whole point of the multi-vector fast path.
+
+    Args:
+      matvec: Y = A X for X of shape [n, nrhs] (batched-capable operator).
+      B: right-hand-side block, shape [n, nrhs] (raises otherwise).
+      X0: optional initial guess, shape [n, nrhs] (defaults to zeros).
+      tol: per-column relative residual tolerance.
+      maxiter: iteration cap (counts until *every* column converged).
+
+    Returns:
+      :class:`BlockCGResult` with the solution block ``X`` [n, nrhs], the
+      shared iteration count and per-column residual norms [nrhs].
     """
     if B.ndim != 2:
         raise ValueError(f"block_cg expects B of shape [n, nrhs], got {B.shape}")
@@ -129,9 +155,18 @@ def block_power_iteration(
     """Top-k eigenvalue estimates via subspace (orthogonal) iteration.
 
     One batched matvec (SpMM over a [n, k] block) per sweep followed by a QR
-    re-orthonormalisation; returns the k Rayleigh-quotient eigenvalues in
-    descending order.  Generalises :func:`power_iteration` (k = 1) while
-    streaming the matrix once per sweep for the whole subspace.
+    re-orthonormalisation.  Generalises :func:`power_iteration` (k = 1)
+    while streaming the matrix once per sweep for the whole subspace.
+
+    Args:
+      matvec: Y = A X for X of shape [n, k] (batched-capable operator).
+      n: problem size (rows of A).
+      k: subspace dimension — how many leading eigenvalues to estimate.
+      iters: number of sweeps.
+      seed: PRNG seed for the random initial subspace.
+
+    Returns:
+      [k] Rayleigh-quotient eigenvalue estimates, descending.
     """
     V = jax.random.normal(jax.random.PRNGKey(seed), (n, k))
     V, _ = jnp.linalg.qr(V)

@@ -88,10 +88,14 @@ class PreparedSpMV:
     def __call__(self, x: jax.Array) -> jax.Array:
         """SpMV / SpMM in the *reordered* index space.
 
-        ``x`` may be a single vector ([n]) or a multi-vector block ([n, B]);
-        the batched form streams the matrix exactly once for all B columns
-        (SpMV is bandwidth-bound, so the extra right-hand sides are nearly
-        free — the SELL-C-σ/CG amortization argument).
+        Args:
+          x: a single vector of shape [n] or a multi-vector block [n, B].
+
+        Returns:
+          y = A x of shape [m] (resp. [m, B]).  The batched form streams the
+          matrix exactly once for all B columns (SpMV is bandwidth-bound, so
+          the extra right-hand sides are nearly free — the SELL-C-σ/CG
+          amortization argument).
         """
         if self.backend == "sellcs":
             return kops.spmv_sellcs(
@@ -116,7 +120,16 @@ class PreparedSpMV:
         return self(X)
 
     def apply_original(self, x_old: jax.Array) -> jax.Array:
-        """SpMV / SpMM for vectors indexed in the matrix's original ordering."""
+        """SpMV / SpMM for vectors indexed in the matrix's original ordering.
+
+        Args:
+          x_old: [n] or [n, B] in the *original* (pre-reordering) index space.
+
+        Returns:
+          y = A x in the original index space, [m] resp. [m, B] — the
+          permutation is applied on the way in and inverted on the way out
+          using device-resident index arrays cached at ``prepare`` time.
+        """
         y_new = self(x_old[self._perm_dev])
         return y_new[self._inv_perm_dev]
 
@@ -145,30 +158,69 @@ def prepare(
     adaptive: bool = False,
     sell_c: int = 8,
     sell_sigma: int | None = None,
-) -> PreparedSpMV:
+    mesh=None,
+    shard_axis: str = "data",
+    x_strategy: str = "auto",
+):
     """Full heterogeneous SpMV setup pipeline (paper Sec. 3–4 + registry).
 
-    ``format`` selects the storage backend:
+    Args:
+      A: the matrix, as a :class:`~repro.sparse.CSRMatrix` of shape [m, n].
+      device: target device model ("tpu_v5e" | "volta" | "ampere" | "cpu" |
+        "rome" | "icelake") — drives the constant-time tuner and the format
+        selector.
+      format: storage backend selection:
 
-    * ``"auto"`` — compute one-pass :class:`~repro.sparse.MatrixStats`
-      (nnz/row mean + variance, rdensity, post-Band-k bandwidth) and dispatch
-      via the registry's O(1) :func:`~repro.sparse.select_format`: matrices
-      with nnz/row variance ≤ 10 (the paper's Sec. 6 regularity bound) take
-      the CSR-k path below, bit-for-bit identical to ``format="csrk"``;
-      irregular matrices take SELL-C-σ.
-    * ``"csrk"`` — force the paper's path: Band-k reorder → constant-time
-      tune from rdensity → CSR-k build → padded tile view (TPU).
-    * ``"sellcs"`` — force SELL-C-σ: σ-window sort → C-row chunks → per-chunk
-      padded slices → uniform-width Pallas view.  No Band-k (the σ-sort is the
-      reordering; ``perm`` stays identity).
+        * ``"auto"`` — compute one-pass :class:`~repro.sparse.MatrixStats`
+          (nnz/row mean + variance, rdensity, post-Band-k bandwidth) and
+          dispatch via the registry's O(1)
+          :func:`~repro.sparse.select_format`: matrices with nnz/row variance
+          ≤ 10 (the paper's Sec. 6 regularity bound) take the CSR-k path,
+          bit-for-bit identical to ``format="csrk"``; irregular matrices take
+          SELL-C-σ.
+        * ``"csrk"`` — force the paper's path: Band-k reorder →
+          constant-time tune from rdensity → CSR-k build → padded tile view.
+        * ``"sellcs"`` — force SELL-C-σ: σ-window sort → C-row chunks →
+          per-chunk padded slices → uniform-width Pallas view.  No Band-k
+          (the σ-sort is the reordering; ``perm`` stays identity).
+      reorder: global reordering for the CSR-k path ("bandk" | "rcm" |
+        "natural").
+      params: explicit :class:`~repro.core.tuner.TuningParams`; None runs the
+        constant-time tuner.
+      gather_mode: in-kernel x-gather ("onehot" MXU matmuls | "take").
+      interpret: run Pallas in interpret mode (True off-TPU).
+      adaptive: replace the paper's rdensity-only formula with the
+        variance-aware bytes-model tuner (beyond-paper; CSR-k path only).
+      sell_c / sell_sigma: SELL-C-σ chunk height and sorting window
+        (defaults: C=8 sublanes, σ=16·C).
+      mesh: optional :class:`jax.sharding.Mesh`.  When given, the prepared
+        operator is partitioned over ``shard_axis`` and returned as a
+        :class:`~repro.core.distributed.ShardedPreparedSpMV` — same call
+        surface, bit-for-bit identical results, Pallas kernels running
+        inside ``shard_map``.
+      shard_axis: mesh axis name rows are partitioned over (default "data").
+      x_strategy: x distribution for the sharded operator: "auto" (O(1)
+        selection from the matrix stats), "replicated", "allgather" or
+        "halo".  Ignored when ``mesh`` is None.
 
-    ``sell_c``/``sell_sigma`` tune the SELL-C-σ chunk height and sorting
-    window (defaults: C=8 sublanes, σ=16·C).
-
-    ``adaptive=True`` replaces the paper's rdensity-only formula with the
-    variance-aware bytes-model tuner (beyond-paper, EXPERIMENTS §Perf);
-    CSR-k path only.
+    Returns:
+      A :class:`PreparedSpMV` (or :class:`ShardedPreparedSpMV` when ``mesh``
+      is given) whose ``__call__`` maps x of shape [n] or [n, B] to y of
+      shape [m] resp. [m, B] in the reordered index space;
+      ``apply_original`` works in the matrix's original index space.
     """
+    if mesh is not None:
+        base = prepare(
+            A, device, format=format, reorder=reorder, params=params,
+            gather_mode=gather_mode, interpret=interpret, adaptive=adaptive,
+            sell_c=sell_c, sell_sigma=sell_sigma,
+        )
+        from repro.core.distributed import shard_prepared
+
+        src = base.csrk.csr if base.backend == "csrk" else A
+        return shard_prepared(
+            base, mesh, axis=shard_axis, x_strategy=x_strategy, A=src
+        )
     stats = None
     if format == "auto":
         stats = compute_stats(A)
@@ -236,12 +288,29 @@ def prepare(
 
 
 def spmv(A: CSRMatrix, x: jax.Array) -> jax.Array:
-    """One-shot CSR SpMV (no setup) — plain-CSR baseline."""
+    """One-shot CSR SpMV (no setup) — the plain-CSR baseline.
+
+    Args:
+      A: CSR matrix of shape [m, n].
+      x: vector of shape [n].
+
+    Returns:
+      y = A x of shape [m], computed with the pure-jnp segmented oracle.
+    """
     return kref.spmv_csr(A, x)
 
 
 def spmm(A: CSRMatrix, X: jax.Array) -> jax.Array:
-    """One-shot CSR SpMM (no setup): Y = A X for X of shape [n, B]."""
+    """One-shot CSR SpMM (no setup): Y = A X.
+
+    Args:
+      A: CSR matrix of shape [m, n].
+      X: multi-vector block of shape [n, B] (raises otherwise).
+
+    Returns:
+      Y of shape [m, B]; the matrix nnz stream is read once for all B
+      right-hand sides.
+    """
     if X.ndim != 2:
         raise ValueError(f"spmm expects X of shape [n, B], got {X.shape}")
     return kref.spmm_csr(A, X)

@@ -128,9 +128,21 @@ def spmv_csrk_tiles_pallas(
 ) -> jax.Array:
     """Run the CSR-k Pallas kernel over all tiles.
 
-    ``x_padded`` may be a vector ([·]) or a multi-vector block ([·, B]);
-    returns y of [T * R] (resp. [T * R, B]).  The vector path is unchanged
-    from the single-RHS kernel (bit-for-bit).
+    Args:
+      vals / local_col / local_row: [T, S] padded per-SSR tile arrays.
+      win_block: [T] x-window block index per tile (scalar-prefetched).
+      x_padded: [(nblocks+1)·window] vector or [·, B] block, padded by
+        ops.py (or by the distributed layer's per-shard x reconstruction).
+      rows_per_tile / window: static tile geometry from :class:`CSRkTiles`.
+
+    Returns:
+      y of [T · R] (resp. [T · R, B]).  The vector path is unchanged from
+      the single-RHS kernel (bit-for-bit).
+
+    The kernel is pure in the tile arrays, so the distributed layer can run
+    it unmodified inside ``shard_map`` on a contiguous slice of tiles — each
+    shard is just a smaller T with identical statics, which is what makes
+    the sharded operator bit-for-bit equal to the global launch.
     """
     if x_padded.ndim == 2:
         return _spmm_csrk_tiles_pallas_batched(

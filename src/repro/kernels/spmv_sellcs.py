@@ -94,10 +94,24 @@ def spmv_sellcs_pallas(
     gather_mode: str = "onehot",
     interpret: bool = True,
 ) -> jax.Array:
-    """Run the SELL-C-σ kernel over all chunks. Returns y of [T * C]
-    (resp. [T * C, B] for batched x) in σ-sorted row order (ops.py scatters
-    back to the original ordering).  The vector path is unchanged from the
-    single-RHS kernel (bit-for-bit)."""
+    """Run the SELL-C-σ kernel over all chunks.
+
+    Args:
+      vals / col_idx: [T, C, W] uniform-width chunk arrays (padding slots
+        carry val 0 / col 0 and are inert).
+      x_padded: [n_pad] vector or [n_pad, B] block, padded to a 128 multiple
+        by ops.py (or by the distributed layer's per-shard reconstruction).
+
+    Returns:
+      y of [T · C] (resp. [T · C, B]) in σ-sorted row order — the caller
+      (ops.py, or the sharded operator after reassembly) scatters back to
+      the original ordering via ``row_perm``.  The vector path is unchanged
+      from the single-RHS kernel (bit-for-bit).
+
+    Like the CSR-k kernel, this is pure in the chunk arrays: the distributed
+    layer runs it unmodified inside ``shard_map`` over a contiguous slice of
+    chunks (smaller T, identical statics).
+    """
     T, C, W = vals.shape
     n_pad = x_padded.shape[0]
     if x_padded.ndim == 2:

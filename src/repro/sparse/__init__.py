@@ -35,6 +35,7 @@ from repro.sparse.sellcs import (  # noqa: F401
 from repro.sparse.stats import (  # noqa: F401
     REGULAR_ROW_VAR_MAX,
     MatrixStats,
+    compute_shard_stats,
     compute_stats,
 )
 from repro.sparse.registry import (  # noqa: F401

@@ -79,6 +79,23 @@ class CSRMatrix:
     def fromdense(cls, dense: Array) -> "CSRMatrix":
         return COOMatrix.fromdense(dense).tocsr()
 
+    def row_slice(self, r0: int, r1: int) -> "CSRMatrix":
+        """Return the contiguous row block ``A[r0:r1, :]`` as a CSR matrix.
+
+        Zero-copy on the nnz arrays apart from the sliced views; column
+        indices stay global (shape is [r1−r0, n]).  Used by the distributed
+        layer's per-shard statistics.
+        """
+        rp = np.asarray(self.row_ptr)
+        s, e = int(rp[r0]), int(rp[r1])
+        new_rp = (rp[r0 : r1 + 1] - rp[r0]).astype(np.int32)
+        return CSRMatrix(
+            jnp.asarray(new_rp),
+            self.col_idx[s:e],
+            self.vals[s:e],
+            (r1 - r0, self.shape[1]),
+        )
+
     def permute_rows(self, perm: np.ndarray) -> "CSRMatrix":
         """Return PA for a row permutation ``perm`` (new row i = old row perm[i])."""
         perm = np.asarray(perm)

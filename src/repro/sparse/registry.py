@@ -53,7 +53,17 @@ _ORDER: List[str] = []
 
 
 def register_format(spec: FormatSpec, *, overwrite: bool = False) -> FormatSpec:
-    """Add a format to the registry. Idempotent only with ``overwrite=True``."""
+    """Add a format to the registry.
+
+    Args:
+      spec: the :class:`FormatSpec` to register (its ``matches`` predicate
+        must be O(1) over :class:`MatrixStats`).
+      overwrite: allow replacing an existing registration (otherwise a
+        duplicate name raises ``ValueError``).
+
+    Returns:
+      The registered spec (for decorator-style use).
+    """
     if spec.name in _REGISTRY and not overwrite:
         raise ValueError(f"format {spec.name!r} already registered")
     if spec.name not in _REGISTRY:
@@ -63,6 +73,12 @@ def register_format(spec: FormatSpec, *, overwrite: bool = False) -> FormatSpec:
 
 
 def get_format(name: str) -> FormatSpec:
+    """Look up a registered :class:`FormatSpec` by name.
+
+    Raises ``KeyError`` (listing the registered names) for unknown formats.
+    Non-selectable baseline formats are addressable here even though the
+    auto-selector never picks them.
+    """
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -72,11 +88,21 @@ def get_format(name: str) -> FormatSpec:
 
 
 def available_formats() -> List[str]:
+    """All registered format names, in registration order."""
     return list(_ORDER)
 
 
 def select_format(stats: MatrixStats, device: str = "tpu_v5e") -> str:
-    """O(1) format choice: first matching selectable spec in priority order."""
+    """O(1) format choice: first matching selectable spec in priority order.
+
+    Args:
+      stats: one-pass :class:`MatrixStats` of the matrix (or of one shard's
+        row block — the distributed layer calls this per shard).
+      device: device model name, forwarded to each spec's predicate.
+
+    Returns:
+      The winning format name (e.g. ``"csrk"`` or ``"sellcs"``).
+    """
     specs = sorted(
         (s for s in (_REGISTRY[n] for n in _ORDER) if s.selectable),
         key=lambda s: -s.priority,

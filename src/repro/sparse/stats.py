@@ -71,3 +71,36 @@ def compute_stats(A: CSRMatrix) -> MatrixStats:
         row_max=int(lengths.max(initial=0)),
         bandwidth=bandwidth,
     )
+
+
+def compute_shard_stats(
+    A: CSRMatrix, num_shards: int, rows_per_shard: int | None = None
+) -> list:
+    """Per-shard :class:`MatrixStats` for a contiguous row partition.
+
+    Rows are split into ``num_shards`` contiguous blocks of
+    ``rows_per_shard`` rows (default ``ceil(m / num_shards)``) and each block
+    gets its own one-pass statistics, so the format registry can make a
+    *per-shard* selection (Kreutzer et al.: the per-shard kernel choice
+    matters most exactly when rows are partitioned).  The distributed layer
+    passes its actual tile-granular ``rows_per_shard`` so the recorded
+    decisions describe the rows each shard really executes.
+
+    Args:
+      A: the global CSR matrix (post-reordering if the caller reorders).
+      num_shards: number of contiguous row blocks.
+      rows_per_shard: rows per block; None means ``ceil(m / num_shards)``.
+
+    Returns:
+      A list of ``num_shards`` :class:`MatrixStats`, one per row block (empty
+      trailing blocks get all-zero stats).
+    """
+    m = A.m
+    if rows_per_shard is None:
+        rows_per_shard = -(-m // max(int(num_shards), 1))
+    out = []
+    for d in range(num_shards):
+        r0 = min(d * rows_per_shard, m)
+        r1 = min((d + 1) * rows_per_shard, m)
+        out.append(compute_stats(A.row_slice(r0, r1)))
+    return out
