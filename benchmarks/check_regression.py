@@ -1,0 +1,122 @@
+"""CI perf-regression gate: compare a fresh benchmark record against a baseline.
+
+  python benchmarks/check_regression.py NEW.json BASELINE.json \
+      [--tolerance 0.5] [--min-us 100]
+
+Compares every metric the two files share, by unit:
+
+* time units (``us``/``ms``/``s``): regression when the new value is more
+  than ``tolerance`` (relative) slower AND more than ``--min-us`` slower in
+  absolute terms — the absolute floor keeps sub-100 µs interpret-mode noise
+  from tripping the gate;
+* ``gflop/s``: regression when throughput drops by more than ``tolerance``.
+
+Counters, fractions and series points are identity/structure metrics, not
+perf, and are ignored.  Exit codes: 0 — no regression (also when the
+baseline file is missing or was recorded on different hardware: the gate
+warns and passes, so a fresh branch or a device change never blocks CI);
+1 — at least one regression, each printed with old/new/ratio.
+
+Reads both the ``{"meta", "records"}`` shape ``benchmarks/run.py --json``
+writes and legacy bare record lists.  ``benchmarks/report.py --trajectory``
+is the companion that *plots* the archive this gate protects.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_TIME_US = {"us": 1.0, "ms": 1e3, "s": 1e6}
+
+
+def _read(path):
+    import json
+
+    with open(path) as f:
+        payload = json.load(f)
+    if isinstance(payload, list):
+        return {}, payload
+    return payload.get("meta", {}), payload.get("records", [])
+
+
+def _metric_map(records):
+    """{(section, name): (value, unit)} — later duplicates win."""
+    return {
+        (r["section"], r["name"]): (float(r["value"]), r.get("unit", ""))
+        for r in records
+    }
+
+
+def compare(new_records, base_records, *, tolerance: float, min_us: float):
+    """Return a list of regression dicts (empty when the gate passes)."""
+    new_map = _metric_map(new_records)
+    base_map = _metric_map(base_records)
+    regressions = []
+    for key in sorted(set(new_map) & set(base_map)):
+        new_v, unit = new_map[key]
+        base_v, base_unit = base_map[key]
+        if unit != base_unit:
+            continue  # schema drift: not comparable
+        if unit in _TIME_US:
+            scale = _TIME_US[unit]
+            new_us, base_us = new_v * scale, base_v * scale
+            if (new_us > base_us * (1 + tolerance)
+                    and new_us - base_us > min_us):
+                regressions.append({
+                    "section": key[0], "name": key[1], "unit": unit,
+                    "baseline": base_v, "new": new_v,
+                    "ratio": new_us / max(base_us, 1e-12),
+                })
+        elif unit == "gflop/s":
+            if new_v < base_v * (1 - tolerance):
+                regressions.append({
+                    "section": key[0], "name": key[1], "unit": unit,
+                    "baseline": base_v, "new": new_v,
+                    "ratio": new_v / max(base_v, 1e-12),
+                })
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="fresh record file (run.py --json output)")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="previous archived record file; missing → warn-only "
+                         "pass (first run on a branch)")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="relative slowdown allowed before failing "
+                         "(0.5 = 50%%; interpret-mode timings are noisy)")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="absolute time-regression floor in µs (noise gate)")
+    args = ap.parse_args()
+
+    if not args.baseline or not os.path.exists(args.baseline):
+        print(f"# no baseline record ({args.baseline!r}) — gate passes "
+              "warn-only; the next run will compare against this one")
+        return 0
+    new_meta, new_records = _read(args.new)
+    base_meta, base_records = _read(args.baseline)
+
+    for key in ("device_kind", "backend"):
+        nv, bv = new_meta.get(key), base_meta.get(key)
+        if nv and bv and nv != bv:
+            print(f"# baseline was recorded on {key}={bv!r}, this run is "
+                  f"{nv!r} — cross-device comparison skipped (gate passes)")
+            return 0
+
+    regressions = compare(new_records, base_records,
+                          tolerance=args.tolerance, min_us=args.min_us)
+    shared = len(set(_metric_map(new_records)) & set(_metric_map(base_records)))
+    print(f"# compared {shared} shared metrics "
+          f"(tolerance {args.tolerance:.0%}, floor {args.min_us:.0f} µs): "
+          f"{len(regressions)} regression(s)")
+    for r in regressions:
+        print(f"REGRESSION {r['section']}.{r['name']}: "
+              f"{r['baseline']:.3f} -> {r['new']:.3f} {r['unit']} "
+              f"({r['ratio']:.2f}x)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

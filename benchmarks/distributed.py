@@ -11,13 +11,13 @@ process.  CI runs it as its own step:
 
     PYTHONPATH=src python benchmarks/distributed.py --quick --json dist.json
 
-``--json`` writes the same ``{"section", "name", "value", "unit"}`` records
-as ``benchmarks/run.py`` (section ``"distributed"``).
+``--json`` writes the same ``{"meta", "records"}`` file as
+``benchmarks/run.py`` (rows in section ``"distributed"``, plus the obs
+registry's sharding-decision metrics in section ``"distributed"``/"prepare").
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -120,10 +120,10 @@ def main() -> None:
     if args.json:
         sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
         from run import _flatten
+        from repro.obs import get_registry, write_records
 
-        records = _flatten("distributed", rows)
-        with open(args.json, "w") as f:
-            json.dump(records, f, indent=1)
+        records = _flatten("distributed", rows) + get_registry().records()
+        write_records(args.json, records)
         print(f"# wrote {len(records)} records to {args.json}", file=sys.stderr)
 
 

@@ -1,7 +1,11 @@
 """Paper Fig. 12: storage overhead of CSR-3 (+CSR-2) over plain CSR.
 
 Adds the TPU-specific column the paper doesn't have: padded-tile overhead
-(the price of static BlockSpecs, traded by the tuner).
+(the price of static BlockSpecs, traded by the tuner).  The per-operator
+columns (``op_overhead_pct``, ``op_pad_overhead_pct``) are read back from
+the :mod:`repro.obs` metrics export rather than queried off the operator —
+``prepare()`` publishes its structural gauges, and this benchmark is the
+first consumer that *prints* them instead of leaving them query-only.
 """
 from __future__ import annotations
 
@@ -10,6 +14,7 @@ from repro.configs.spmv_suite import SUITE
 from repro.core.formats import build_csrk, csr5_from_csr, tiles_from_csrk
 from repro.core.spmv import prepare
 from repro.core import tuner
+from repro.obs import MetricsRegistry, using_registry
 
 
 def run(scale: int = 1024, ids=None) -> list:
@@ -21,7 +26,11 @@ def run(scale: int = 1024, ids=None) -> list:
         p3 = tuner.tune(A.rdensity, device="tpu_v5e", m=A.m)
         k3 = build_csrk(A, srs=p3.srs, ssrs=p3.ssrs, k=3)
         k2 = build_csrk(A, srs=tuner.CPU_FIXED_SRS, k=2)
-        op = prepare(A, device="tpu_v5e", reorder="bandk")
+        # scoped registry: the gauges read below belong to *this* prepare()
+        with using_registry(MetricsRegistry()) as reg:
+            prepare(A, device="tpu_v5e", reorder="bandk")
+            op_overhead = reg.get("prepare", "overhead_fraction") or 0.0
+            op_pad = reg.get("prepare", "padding_overhead") or 0.0
         c5 = csr5_from_csr(A)
         rows.append({
             "id": entry.id,
@@ -32,10 +41,13 @@ def run(scale: int = 1024, ids=None) -> list:
             "csr3_plus_csr2_overhead_pct": round(
                 100 * (k3.overhead_fraction() + k2.overhead_fraction()), 3
             ),
-            "tpu_tile_pad_overhead_pct": round(100 * op.padding_overhead(), 1),
+            "op_overhead_pct": round(100 * op_overhead, 3),
+            "op_pad_overhead_pct": round(100 * op_pad, 1),
+            "tpu_tile_pad_overhead_pct": round(100 * op_pad, 1),
         })
     emit(rows, ["id", "matrix", "rdensity", "csr5_overhead_pct",
                 "csr3_overhead_pct", "csr3_plus_csr2_overhead_pct",
+                "op_overhead_pct", "op_pad_overhead_pct",
                 "tpu_tile_pad_overhead_pct"])
     # paper claim check
     worst = max(r["csr3_plus_csr2_overhead_pct"] for r in rows)

@@ -1,9 +1,22 @@
-"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from the JSON artifacts.
+"""Render benchmark artifacts: EXPERIMENTS tables and the perf trajectory.
 
-  python benchmarks/report.py  # prints markdown tables to stdout
+Two modes:
+
+* ``python benchmarks/report.py`` — legacy: prints the EXPERIMENTS.md
+  §Dry-run/§Roofline markdown tables from the roofline JSON artifacts.
+* ``python benchmarks/report.py --trajectory 'BENCH_*.json' --out
+  BENCH_TRAJECTORY.json --markdown`` — aggregates archived per-commit
+  ``BENCH_<sha>.json`` record files (both the new ``{"meta", "records"}``
+  shape and legacy bare lists) into one trajectory: points ordered by the
+  stamped timestamp, each summarised per section (mean time, mean GFLOP/s,
+  record count).  The JSON output is what CI archives as
+  ``BENCH_TRAJECTORY.json``; ``--markdown`` prints the human table.
+  ``benchmarks/check_regression.py`` is the gate that *compares* two points.
 """
 from __future__ import annotations
 
+import argparse
+import glob as globlib
 import json
 import os
 import sys
@@ -95,8 +108,116 @@ def merged_sweep(root):
     return out
 
 
-if __name__ == "__main__":
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# ---------------------------------------------------------------------------
+# perf trajectory: BENCH_<sha>.json files → BENCH_TRAJECTORY.json + markdown
+# ---------------------------------------------------------------------------
+
+def _read_bench(path):
+    """Read one record file (``{"meta", "records"}`` or legacy bare list)."""
+    with open(path) as f:
+        payload = json.load(f)
+    if isinstance(payload, list):
+        return {}, payload
+    return payload.get("meta", {}), payload.get("records", [])
+
+
+def summarize_records(records):
+    """Per-section summary of one record file.
+
+    For every section: ``<section>.mean_us`` (mean of all time-unit rows,
+    normalised to µs), ``<section>.mean_gflops`` (mean of GFLOP/s rows) and
+    ``<section>.records`` — compact enough to tabulate across many commits
+    while still catching a perf cliff in any section.
+    """
+    _TIME_US = {"us": 1.0, "ms": 1e3, "s": 1e6}
+    by_section = {}
+    for r in records:
+        sec = by_section.setdefault(r["section"], {"t": [], "g": [], "n": 0})
+        sec["n"] += 1
+        unit = r.get("unit", "")
+        if unit in _TIME_US:
+            sec["t"].append(r["value"] * _TIME_US[unit])
+        elif unit == "gflop/s":
+            sec["g"].append(r["value"])
+    out = {}
+    for name, sec in sorted(by_section.items()):
+        out[f"{name}.records"] = sec["n"]
+        if sec["t"]:
+            out[f"{name}.mean_us"] = sum(sec["t"]) / len(sec["t"])
+        if sec["g"]:
+            out[f"{name}.mean_gflops"] = sum(sec["g"]) / len(sec["g"])
+    return out
+
+
+def build_trajectory(paths):
+    """Aggregate record files into an ordered trajectory.
+
+    Points carry their identity meta plus the per-section summary; ordering
+    is by stamped timestamp (unstamped legacy files sort first, by
+    filename, so the trajectory stays usable across the schema change).
+    """
+    points = []
+    for path in paths:
+        meta, records = _read_bench(path)
+        points.append({
+            "file": os.path.basename(path),
+            "git_sha": meta.get("git_sha", "unknown"),
+            "timestamp": meta.get("timestamp", ""),
+            "device_kind": meta.get("device_kind", "unknown"),
+            "jax_version": meta.get("jax_version", "unknown"),
+            "n_records": len(records),
+            "summary": summarize_records(records),
+        })
+    points.sort(key=lambda p: (p["timestamp"], p["file"]))
+    return {"points": points}
+
+
+def trajectory_markdown(traj, max_cols: int = 8):
+    """Markdown table of the trajectory (one row per archived record file)."""
+    points = traj["points"]
+    if not points:
+        return "_empty trajectory_\n"
+    keys = sorted(
+        {k for p in points for k in p["summary"]},
+        # perf columns first, then record counts
+        key=lambda k: (k.endswith(".records"), k),
+    )[:max_cols]
+    head = "| sha | timestamp | device | " + " | ".join(keys) + " |"
+    rule = "|---" * (3 + len(keys)) + "|"
+    rows = [head, rule]
+    for p in points:
+        cells = []
+        for k in keys:
+            v = p["summary"].get(k)
+            cells.append("" if v is None else f"{v:.3g}")
+        rows.append(
+            f"| {p['git_sha'][:8]} | {p['timestamp'][:19]} "
+            f"| {p['device_kind']} | " + " | ".join(cells) + " |"
+        )
+    return "\n".join(rows) + "\n"
+
+
+def _trajectory_main(args):
+    paths = []
+    for pat in args.trajectory:
+        hits = sorted(globlib.glob(pat))
+        if not hits and os.path.exists(pat):
+            hits = [pat]
+        paths += hits
+    # the trajectory output itself matches BENCH_*.json — never ingest it
+    paths = [p for p in dict.fromkeys(paths)
+             if os.path.basename(p) != os.path.basename(args.out or "")]
+    traj = build_trajectory(paths)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(traj, f, indent=1)
+        print(f"# wrote {len(traj['points'])} trajectory points to {args.out}",
+              file=sys.stderr)
+    if args.markdown or not args.out:
+        print(trajectory_markdown(traj))
+
+
+def _legacy_main(root):
     merged = merged_sweep(root)
     tmp = os.path.join(root, "roofline_merged.json")
     with open(tmp, "w") as f:
@@ -111,3 +232,20 @@ if __name__ == "__main__":
     print(roofline_table(tmp, "baseline"))
     print("\n### Before/after (dominant term of the baseline)\n")
     print(before_after_table(tmp))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trajectory", nargs="+", metavar="GLOB", default=None,
+                    help="aggregate BENCH_*.json record files (globs ok) "
+                         "into a trajectory instead of the legacy tables")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the trajectory JSON here "
+                         "(e.g. BENCH_TRAJECTORY.json)")
+    ap.add_argument("--markdown", action="store_true",
+                    help="also print the trajectory as a markdown table")
+    args = ap.parse_args()
+    if args.trajectory:
+        _trajectory_main(args)
+    else:
+        _legacy_main(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -2,13 +2,18 @@
 
 ``python -m benchmarks.run [--quick]`` prints ``name,...`` CSV blocks.
 ``--json PATH`` additionally writes every section's rows as machine-readable
-records ``{"section", "name", "value", "unit"}`` — the format the CI smoke
-step archives so the perf trajectory is tracked across PRs.
+records ``{"section", "name", "value", "unit"}``, wrapped with an identity
+``meta`` block (git sha, jax version, device kind/count, timestamp — see
+``repro.obs.collect_metadata``) so the archived ``BENCH_<sha>.json`` files
+can be ordered into a trajectory (``benchmarks/report.py --trajectory``) and
+gated against regressions (``benchmarks/check_regression.py``).  The file
+also carries the telemetry the run itself produced — ``prepare()`` phase
+timings, padding/pointer-overhead gauges, kernel launch counters — exported
+from the :mod:`repro.obs` registry in the same record schema.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
@@ -122,8 +127,10 @@ def main() -> None:
         from benchmarks import roofline
         records += _flatten("roofline", roofline.run())
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(records, f, indent=1)
+        from repro.obs import get_registry, write_records
+
+        records += get_registry().records()
+        write_records(args.json, records)
         print(f"\n# wrote {len(records)} records to {args.json}", file=sys.stderr)
     print(f"\n# total {time.time()-t0:.0f}s", file=sys.stderr)
 

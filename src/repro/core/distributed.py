@@ -51,6 +51,7 @@ from jax.experimental.shard_map import shard_map
 from repro.core.formats import CSRMatrix
 from repro.kernels import ref as kref
 from repro.kernels.ops import _pad_rows
+from repro.obs import get_registry
 from repro.sparse.csrk import _round_up
 from repro.sparse.stats import MatrixStats, compute_shard_stats
 
@@ -653,6 +654,7 @@ def shard_prepared(
         else:
             x_strategy = "allgather"
     halo = 0
+    demoted = False
     if x_strategy == "halo":
         H_req = _required_halo(real_cols, Rs, D)
         halo = max(_round_up(max(H_req, 1), _LANE), _LANE)
@@ -660,6 +662,20 @@ def shard_prepared(
             # a shard reaches beyond its neighbours — halo cannot be exchanged
             # with a single ppermute pair; fall back to the O(n) gather.
             x_strategy, halo = "allgather", 0
+            demoted = True
+
+    # -- telemetry: the sharding decisions, as metrics rather than only as
+    # operator attributes (docs/observability.md) ---------------------------
+    reg = get_registry()
+    if reg.enabled:
+        reg.gauge("distributed", "num_shards", D, unit="count")
+        reg.gauge("distributed", "rows_per_shard", Rs, unit="count")
+        reg.gauge("distributed", "halo_rows", halo, unit="count")
+        reg.counter("distributed", f"x_strategy.{x_strategy}")
+        if demoted:
+            reg.counter("distributed", "halo_demoted_to_allgather")
+        for b in shard_backends:
+            reg.counter("distributed", f"shard_backend.{b}")
 
     return ShardedPreparedSpMV(
         x_strategy=x_strategy,

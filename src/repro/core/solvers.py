@@ -7,15 +7,48 @@ interchangeability is itself a test of the format's "no conversion needed"
 claim.  Block variants (``block_cg``, ``block_power_iteration``) issue one
 *batched* matvec per iteration, so they ride the [n, B] SpMM fast path on
 every backend, single-device or sharded.
+
+Telemetry: every solver carries a per-iteration residual-norm history in its
+loop state (always — the recurrence is identical whether telemetry is on or
+off, so enabling observation can never change a solution bit).  When the
+solve runs *eagerly*, the history and iteration count are concrete on exit
+and are recorded into the :mod:`repro.obs` registry as a
+``solvers.<name>.residual`` series plus iteration/time metrics; under an
+outer ``jit`` they are tracers and the tracer-safe registry skips them.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.obs import concrete, get_registry
+
 MatVec = Callable[[jax.Array], jax.Array]
+
+
+def _record_solve(name: str, iters, residuals, seconds: float) -> None:
+    """Record one finished solve (no-op when disabled or inside a trace).
+
+    ``iters`` / ``residuals`` are outputs of the solver's ``while_loop``: if
+    ``iters`` is concrete the solve ran eagerly and the history is real data;
+    if it is a tracer the whole record is skipped (nothing partial).
+    """
+    reg = get_registry()
+    if not reg.enabled:
+        return
+    k = concrete(iters)
+    if k is None:
+        return
+    import numpy as np
+
+    reg.counter("solvers", f"{name}.solves")
+    reg.observe("solvers", f"{name}.iters", k, unit="count")
+    reg.observe("solvers", f"{name}.time_s", seconds, unit="s")
+    hist = np.asarray(residuals)[: int(k)]
+    reg.series("solvers", f"{name}.residual", hist.tolist())
 
 
 class CGResult(NamedTuple):
@@ -46,27 +79,33 @@ def cg(
       :class:`CGResult` with the solution ``x`` [n], iteration count and the
       final residual norm.
     """
+    t_start = time.perf_counter()
     x0 = jnp.zeros_like(b) if x0 is None else x0
     r0 = b - matvec(x0)
     p0 = r0
     rs0 = jnp.vdot(r0, r0)
     tol2 = jnp.asarray(tol, b.dtype) ** 2 * jnp.maximum(jnp.vdot(b, b), 1e-30)
+    hist0 = jnp.zeros((maxiter,), jnp.float32)
 
     def cond(state):
-        _, _, _, rs, k = state
+        _, _, _, rs, k, _ = state
         return jnp.logical_and(rs > tol2, k < maxiter)
 
     def body(state):
-        x, r, p, rs, k = state
+        x, r, p, rs, k, hist = state
         Ap = matvec(p)
         alpha = rs / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
         x = x + alpha * p
         r = r - alpha * Ap
         rs_new = jnp.vdot(r, r)
         p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
-        return (x, r, p, rs_new, k + 1)
+        hist = hist.at[k].set(jnp.sqrt(rs_new).astype(jnp.float32))
+        return (x, r, p, rs_new, k + 1, hist)
 
-    x, r, _, rs, k = jax.lax.while_loop(cond, body, (x0, r0, p0, rs0, 0))
+    x, r, _, rs, k, hist = jax.lax.while_loop(
+        cond, body, (x0, r0, p0, rs0, 0, hist0)
+    )
+    _record_solve("cg", k, hist, time.perf_counter() - t_start)
     return CGResult(x=x, iters=k, residual=jnp.sqrt(rs))
 
 
@@ -105,6 +144,7 @@ def block_cg(
     """
     if B.ndim != 2:
         raise ValueError(f"block_cg expects B of shape [n, nrhs], got {B.shape}")
+    t_start = time.perf_counter()
     X0 = jnp.zeros_like(B) if X0 is None else X0
     R0 = B - matvec(X0)
     P0 = R0
@@ -112,13 +152,14 @@ def block_cg(
     tol2 = jnp.asarray(tol, B.dtype) ** 2 * jnp.maximum(
         jnp.sum(B * B, axis=0), 1e-30
     )
+    hist0 = jnp.zeros((maxiter,), jnp.float32)     # worst column per iter
 
     def cond(state):
-        _, _, _, rs, k = state
+        _, _, _, rs, k, _ = state
         return jnp.logical_and(jnp.any(rs > tol2), k < maxiter)
 
     def body(state):
-        X, R, P, rs, k = state
+        X, R, P, rs, k, hist = state
         AP = matvec(P)                                           # one SpMM
         active = (rs > tol2).astype(B.dtype)                     # freeze done cols
         alpha = active * rs / jnp.maximum(jnp.sum(P * AP, axis=0), 1e-30)
@@ -128,9 +169,13 @@ def block_cg(
         beta = rs_new / jnp.maximum(rs, 1e-30)
         P = jnp.where(active[None, :] > 0, R + beta[None, :] * P, P)
         rs_new = jnp.where(active > 0, rs_new, rs)
-        return (X, R, P, rs_new, k + 1)
+        hist = hist.at[k].set(jnp.sqrt(jnp.max(rs_new)).astype(jnp.float32))
+        return (X, R, P, rs_new, k + 1, hist)
 
-    X, R, _, rs, k = jax.lax.while_loop(cond, body, (X0, R0, P0, rs0, 0))
+    X, R, _, rs, k, hist = jax.lax.while_loop(
+        cond, body, (X0, R0, P0, rs0, 0, hist0)
+    )
+    _record_solve("block_cg", k, hist, time.perf_counter() - t_start)
     return BlockCGResult(X=X, iters=k, residual=jnp.sqrt(rs))
 
 
@@ -168,6 +213,7 @@ def block_power_iteration(
     Returns:
       [k] Rayleigh-quotient eigenvalue estimates, descending.
     """
+    t_start = time.perf_counter()
     V = jax.random.normal(jax.random.PRNGKey(seed), (n, k))
     V, _ = jnp.linalg.qr(V)
 
@@ -178,7 +224,15 @@ def block_power_iteration(
 
     V = jax.lax.fori_loop(0, iters, body, V)
     H = V.T @ matvec(V)                                          # [k, k] Rayleigh
-    return jnp.linalg.eigvalsh((H + H.T) / 2)[::-1]
+    evals = jnp.linalg.eigvalsh((H + H.T) / 2)[::-1]
+    reg = get_registry()
+    if reg.enabled and concrete(evals[0]) is not None:
+        reg.counter("solvers", "block_power_iteration.solves")
+        reg.observe("solvers", "block_power_iteration.iters", iters,
+                    unit="count")
+        reg.observe("solvers", "block_power_iteration.time_s",
+                    time.perf_counter() - t_start, unit="s")
+    return evals
 
 
 def jacobi_smoother(

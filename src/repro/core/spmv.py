@@ -41,6 +41,7 @@ from repro.sparse import (
 )
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.obs import annotate, get_registry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +147,45 @@ class PreparedSpMV:
         return self.tiles.padding_overhead() if self.tiles is not None else 0.0
 
 
+def _record_prepared(op: PreparedSpMV) -> PreparedSpMV:
+    """Record setup telemetry for a freshly built operator (docs/observability.md).
+
+    Emits the device-upload phase timing (blocking until the kernel-view
+    arrays are resident — the cost callers actually pay before the first
+    SpMV) plus structural gauges: padding overhead, pointer overhead, tile
+    count and a per-backend counter.  Purely observational: the operator is
+    returned unchanged, and nothing here runs when telemetry is disabled.
+    """
+    reg = get_registry()
+    if not reg.enabled:
+        return op
+    with reg.timer("prepare", "phase.device_upload"):
+        if op.backend == "sellcs":
+            uploads = (op.sell_tiles.vals, op.sell_tiles.col_idx)
+        elif op.tiles is not None:
+            uploads = (op.tiles.vals, op.tiles.local_col,
+                       op.tiles.local_row, op.tiles.win_block)
+        else:
+            uploads = (op.csrk.csr.vals, op.csrk.csr.col_idx)
+        for arr in uploads + (op._perm_dev, op._inv_perm_dev):
+            jax.block_until_ready(arr)
+    reg.counter("prepare", f"backend.{op.backend}")
+    reg.gauge("prepare", "padding_overhead", op.padding_overhead(),
+              unit="fraction")
+    reg.gauge("prepare", "overhead_fraction", op.overhead_fraction(),
+              unit="fraction")
+    if op.backend == "sellcs":
+        tile_count = int(op.sell_tiles.vals.shape[0])      # C-row chunks
+    else:
+        tile_count = op.tiles.num_tiles if op.tiles is not None else 0
+    reg.gauge("prepare", "tile_count", tile_count, unit="count")
+    if op.stats is not None:
+        reg.gauge("prepare", "stats.row_var", op.stats.row_var)
+        reg.gauge("prepare", "stats.bandwidth", op.stats.bandwidth,
+                  unit="count")
+    return op
+
+
 def prepare(
     A: CSRMatrix,
     device: str = "tpu_v5e",
@@ -221,14 +261,17 @@ def prepare(
         return shard_prepared(
             base, mesh, axis=shard_axis, x_strategy=x_strategy, A=src
         )
+    reg = get_registry()
     stats = None
     if format == "auto":
-        stats = compute_stats(A)
-        format = select_format(stats, device)
+        with reg.timer("prepare", "phase.stats"):
+            stats = compute_stats(A)
+            format = select_format(stats, device)
     if format == "sellcs":
-        sell = sellcs_from_csr(A, C=sell_c, sigma=sell_sigma)
-        sell_tiles = tiles_from_sellcs(sell)
-        return PreparedSpMV(
+        with reg.timer("prepare", "phase.tile_build"):
+            sell = sellcs_from_csr(A, C=sell_c, sigma=sell_sigma)
+            sell_tiles = tiles_from_sellcs(sell)
+        return _record_prepared(PreparedSpMV(
             csrk=None,
             tiles=None,
             perm=np.arange(A.m),
@@ -242,39 +285,42 @@ def prepare(
             sell=sell,
             sell_tiles=sell_tiles,
             stats=stats,
-        )
+        ))
     if format != "csrk":
         raise ValueError(f"unknown format {format!r} (expected auto|csrk|sellcs)")
 
-    if reorder == "bandk":
-        perm = bandk_mod.bandk(A, k=3)
-    elif reorder == "rcm":
-        perm = bandk_mod.rcm(A)
-    elif reorder == "natural":
-        perm = np.arange(A.m)
-    else:
-        raise ValueError(f"unknown reorder {reorder!r}")
-    Ar = A.symmetric_permute(perm) if reorder != "natural" else A
-    if stats is not None and reorder != "natural":
-        # report the post-reordering bandwidth (row-length stats are
-        # permutation-invariant, so the routing decision is unaffected)
-        stats = compute_stats(Ar)
-
-    if params is None:
-        if adaptive and device == "tpu_v5e":
-            params = tuner_mod.tune_tpu_adaptive(
-                np.asarray(Ar.row_ptr), np.asarray(Ar.col_idx), Ar.rdensity, Ar.m
-            )
+    with reg.timer("prepare", "phase.reorder"):
+        if reorder == "bandk":
+            perm = bandk_mod.bandk(A, k=3)
+        elif reorder == "rcm":
+            perm = bandk_mod.rcm(A)
+        elif reorder == "natural":
+            perm = np.arange(A.m)
         else:
-            params = tuner_mod.tune(Ar.rdensity, device=device, m=Ar.m)
+            raise ValueError(f"unknown reorder {reorder!r}")
+        Ar = A.symmetric_permute(perm) if reorder != "natural" else A
+        if stats is not None and reorder != "natural":
+            # report the post-reordering bandwidth (row-length stats are
+            # permutation-invariant, so the routing decision is unaffected)
+            stats = compute_stats(Ar)
 
-    if params.k >= 3 and device not in ("cpu", "rome", "icelake"):
-        csrk = build_csrk(Ar, srs=params.srs, ssrs=params.ssrs, k=3)
-        tiles = tiles_from_csrk(csrk)
-    else:
-        csrk = build_csrk(Ar, srs=params.srs, k=2)
-        tiles = None
-    return PreparedSpMV(
+    with reg.timer("prepare", "phase.tune"):
+        if params is None:
+            if adaptive and device == "tpu_v5e":
+                params = tuner_mod.tune_tpu_adaptive(
+                    np.asarray(Ar.row_ptr), np.asarray(Ar.col_idx), Ar.rdensity, Ar.m
+                )
+            else:
+                params = tuner_mod.tune(Ar.rdensity, device=device, m=Ar.m)
+
+    with reg.timer("prepare", "phase.tile_build"):
+        if params.k >= 3 and device not in ("cpu", "rome", "icelake"):
+            csrk = build_csrk(Ar, srs=params.srs, ssrs=params.ssrs, k=3)
+            tiles = tiles_from_csrk(csrk)
+        else:
+            csrk = build_csrk(Ar, srs=params.srs, k=2)
+            tiles = None
+    return _record_prepared(PreparedSpMV(
         csrk=csrk,
         tiles=tiles,
         perm=perm,
@@ -284,7 +330,7 @@ def prepare(
         interpret=interpret,
         backend="csrk",
         stats=stats,
-    )
+    ))
 
 
 def spmv(A: CSRMatrix, x: jax.Array) -> jax.Array:

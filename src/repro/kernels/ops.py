@@ -16,6 +16,7 @@ from repro.kernels import ref
 from repro.kernels.spmv_csrk import spmv_csrk_tiles_pallas
 from repro.kernels.spmv_ell import spmv_ell_pallas
 from repro.kernels.spmv_sellcs import spmv_sellcs_pallas
+from repro.obs import annotated
 
 
 def _pad_rows(x: jax.Array, target: int) -> jax.Array:
@@ -36,6 +37,7 @@ def _pad_x_to_blocks(x: jax.Array, window: int) -> jax.Array:
     return _pad_rows(x, (nblocks + 1) * window)
 
 
+@annotated("repro.spmv_csrk", count_section="kernels")
 def spmv_csrk(
     tiles: CSRkTiles,
     x: jax.Array,
@@ -71,6 +73,7 @@ def spmv_csrk(
     return y
 
 
+@annotated("repro.spmv_sellcs", count_section="kernels")
 def spmv_sellcs(
     tiles: SELLCSTiles,
     x: jax.Array,
@@ -102,6 +105,7 @@ def spmv_sellcs(
     return out.at[tiles.row_perm].set(y_sorted)[:m]
 
 
+@annotated("repro.spmv_ell", count_section="kernels")
 def spmv_ell(mat: ELLMatrix, x: jax.Array, *, row_tile: int = 256, interpret: bool = True):
     """ELL SpMV via the Pallas baseline kernel (rows padded to the tile)."""
     m = mat.vals.shape[0]

@@ -18,6 +18,7 @@ from repro.sparse import (
     ELLMatrix,
     SELLCSMatrix,
 )
+from repro.obs import annotated
 
 
 def spmv_dense(dense: jax.Array, x: jax.Array) -> jax.Array:
@@ -30,6 +31,7 @@ def spmv_coo(mat: COOMatrix, x: jax.Array) -> jax.Array:
     return jnp.zeros((mat.shape[0],), contrib.dtype).at[mat.row_idx].add(contrib)
 
 
+@annotated("repro.oracle.spmv_csr", count_section="oracles")
 def spmv_csr(mat: CSRMatrix, x: jax.Array) -> jax.Array:
     """Row-segmented CSR SpMV — the canonical oracle."""
     rows = jnp.repeat(
@@ -89,6 +91,7 @@ def spmv_bcsr(mat: BCSRMatrix, x: jax.Array) -> jax.Array:
     return yb.reshape(-1)[: mat.shape[0]]
 
 
+@annotated("repro.oracle.spmv_csrk_tiles", count_section="oracles")
 def spmv_csrk_tiles(tiles: CSRkTiles, x: jax.Array) -> jax.Array:
     """Oracle for the padded-tile view consumed by the Pallas kernel.
 
@@ -121,6 +124,7 @@ def spmv_csrk_tiles(tiles: CSRkTiles, x: jax.Array) -> jax.Array:
     return y
 
 
+@annotated("repro.oracle.spmv_sellcs", count_section="oracles")
 def spmv_sellcs(mat: SELLCSMatrix, x: jax.Array) -> jax.Array:
     """SELL-C-σ SpMV oracle over the canonical flat slot arrays.
 
@@ -145,6 +149,7 @@ def spmv_sellcs(mat: SELLCSMatrix, x: jax.Array) -> jax.Array:
     return out.at[mat.row_perm].set(y_sorted)[:m]
 
 
+@annotated("repro.oracle.spmm_csr", count_section="oracles")
 def spmm_csr(mat: CSRMatrix, X: jax.Array) -> jax.Array:
     """SpMM oracle (multi-vector SpMV), used by the CG block solver."""
     rows = jnp.repeat(

@@ -1,6 +1,19 @@
-"""Serving launcher: batched prefill + decode loop with a KV cache.
+"""Single-shot generation smoke harness (NOT a serving engine yet).
 
-Host-scale example:
+What this actually does: build one fixed batch of random prompts, run one
+prefill through the KV-cache path, then ``--gen`` greedy (argmax) decode
+steps, and print prefill/decode timings.  There is no request queue, no
+scheduler, no continuous batching and no operator cache — those are the
+ROADMAP's "SpMV serving engine" item; this stub is the measurement anchor
+that engine will be compared against.
+
+Step timings flow through the :mod:`repro.obs` registry (this module is the
+registry's first launch-side consumer): the prefill is timed as
+``serve.prefill``, each decode step lands in the ``serve.decode_step_ms``
+series, and the final record dump is printed so a run is grep-able the same
+way benchmark JSON is.
+
+Smoke example:
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
       --batch 4 --prompt-len 64 --gen 32
 """
@@ -16,6 +29,7 @@ from repro.configs.registry import get_config, get_smoke_config
 from repro.launch.mesh import make_host_mesh
 from repro.launch import steps as STEPS
 from repro.models import transformer as TF
+from repro.obs import get_registry
 
 
 def main() -> None:
@@ -41,31 +55,44 @@ def main() -> None:
         cache = TF.init_cache(cfg, B, max_len)
         decode_step = jax.jit(STEPS.make_decode_step(cfg, mesh), donate_argnums=(1,))
 
+        reg = get_registry()
         # prefill through the cache path (writes K/V for the prompt)
         t0 = time.time()
-        logits, cache, _ = TF.forward(
-            params, prompts, cfg, cache=cache, cache_index=jnp.zeros((), jnp.int32)
-        )
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        jax.block_until_ready(tok)
+        with reg.timer("serve", "prefill"):
+            logits, cache, _ = TF.forward(
+                params, prompts, cfg, cache=cache, cache_index=jnp.zeros((), jnp.int32)
+            )
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            jax.block_until_ready(tok)
         t_prefill = time.time() - t0
 
         out = [tok]
         t0 = time.time()
         for i in range(G - 1):
+            t_step = time.perf_counter()
             logits, cache = decode_step(
                 params, cache, tok, jnp.asarray(P + i, jnp.int32)
             )
             tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            if reg.enabled:
+                # per-step timing needs a sync point; only pay it when
+                # telemetry is on (disabled runs keep async dispatch)
+                jax.block_until_ready(tok)
+                reg.observe("serve", "decode_step_ms",
+                            (time.perf_counter() - t_step) * 1e3, unit="ms")
             out.append(tok)
-        jax.block_until_ready(tok)
         t_decode = time.time() - t0
+        reg.gauge("serve", "tokens_per_s",
+                  (G - 1) * B / max(t_decode, 1e-9), unit="scalar")
 
     gen = jnp.concatenate(out, axis=1)
     print(f"prefill {B}x{P}: {t_prefill*1e3:.1f} ms")
     print(f"decode {G-1} steps: {t_decode*1e3:.1f} ms "
           f"({(G-1)*B/max(t_decode,1e-9):.1f} tok/s)")
     print("sample tokens:", gen[0, :16].tolist())
+    for r in reg.records():
+        if r["section"] == "serve":
+            print(f"# obs {r['section']}.{r['name']} = {r['value']:.3f} {r['unit']}")
 
 
 if __name__ == "__main__":

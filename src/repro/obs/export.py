@@ -1,0 +1,79 @@
+"""JSON export: benchmark-schema records plus run-identifying metadata.
+
+The benchmark harness archives ``BENCH_<sha>.json`` per commit; before this
+module those files were bare record lists, so the perf *trajectory* could
+not be assembled — nothing said which commit, device or jax version a file
+came from.  :func:`collect_metadata` stamps that identity and
+:func:`write_records` wraps ``{"meta": ..., "records": [...]}`` around the
+unchanged ``{"section", "name", "value", "unit"}`` rows.
+:func:`read_records` accepts both shapes, so pre-existing archives stay
+readable by the trajectory aggregator and the regression gate.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import platform
+import subprocess
+import sys
+from typing import List, Optional, Tuple
+
+
+def _git_sha() -> str:
+    """Current commit sha: git first, CI env second, "unknown" last."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=here,
+            capture_output=True, text=True, timeout=10,
+        )
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except Exception:
+        pass
+    return os.environ.get("GITHUB_SHA", "unknown")
+
+
+def collect_metadata() -> dict:
+    """Identity stamp for one benchmark/telemetry record file.
+
+    Keys: ``git_sha``, ``timestamp`` (UTC ISO-8601), ``jax_version``,
+    ``backend`` (jax platform), ``device_kind``, ``device_count``,
+    ``python_version``, ``hostname``.  These are what the trajectory
+    aggregator needs to order points in time and refuse cross-device
+    comparisons.
+    """
+    import jax
+
+    devs = jax.devices()
+    return {
+        "git_sha": _git_sha(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "device_count": len(devs),
+        "python_version": sys.version.split()[0],
+        "hostname": platform.node(),
+    }
+
+
+def write_records(path: str, records: List[dict],
+                  meta: Optional[dict] = None) -> None:
+    """Write ``{"meta": ..., "records": [...]}`` (meta auto-collected)."""
+    payload = {
+        "meta": collect_metadata() if meta is None else meta,
+        "records": list(records),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def read_records(path: str) -> Tuple[dict, List[dict]]:
+    """Read a record file; legacy bare-list files get an empty meta dict."""
+    with open(path) as f:
+        payload = json.load(f)
+    if isinstance(payload, list):
+        return {}, payload
+    return payload.get("meta", {}), payload.get("records", [])

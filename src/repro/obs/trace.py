@@ -1,0 +1,65 @@
+"""Trace annotations: name regions of the sparse stack for profilers.
+
+:func:`annotate` is the single spelling every layer uses.  It stacks two
+complementary scopes:
+
+* ``jax.named_scope`` — tags the *traced* HLO, so kernel launches show up
+  under readable names in compiled-module dumps and XLA profiles;
+* ``jax.profiler.TraceAnnotation`` — tags the *host* timeline, so the
+  setup-side phases (``prepare()``, tile builds, uploads) are visible in a
+  ``jax.profiler.trace()`` capture next to the device stream.
+
+Neither scope changes any computed value; when telemetry is disabled the
+function returns one shared null context and touches nothing.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+from repro.obs.registry import _NULL_CTX, get_registry
+
+
+def annotate(name: str):
+    """Context manager naming a region in both host and HLO traces.
+
+    Usage::
+
+        with annotate("repro.spmv_csrk"):
+            y = spmv_csrk_tiles_pallas(...)
+
+    Returns a shared null context when telemetry is disabled (no-op).
+    """
+    if not get_registry().enabled:
+        return _NULL_CTX
+    import jax
+
+    ctx = contextlib.ExitStack()
+    ctx.enter_context(jax.profiler.TraceAnnotation(name))
+    ctx.enter_context(jax.named_scope(name))
+    return ctx
+
+
+def annotated(name: str, *, count_section: str | None = None):
+    """Decorator form of :func:`annotate`, optionally counting invocations.
+
+    ``count_section`` additionally bumps a ``<name>.calls`` counter in that
+    section.  The counter counts *Python-level* invocations: under ``jit``
+    that is trace events (once per compilation), not per-step executions —
+    exactly the quantity that tells you whether a wrapper is retracing.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            reg = get_registry()
+            if not reg.enabled:
+                return fn(*args, **kwargs)
+            if count_section is not None:
+                reg.counter(count_section, f"{name}.calls")
+            with annotate(name):
+                return fn(*args, **kwargs)
+
+        return wrapper
+
+    return deco
