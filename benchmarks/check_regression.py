@@ -9,10 +9,14 @@ Compares every metric the two files share, by unit:
   than ``tolerance`` (relative) slower AND more than ``--min-us`` slower in
   absolute terms — the absolute floor keeps sub-100 µs interpret-mode noise
   from tripping the gate;
-* ``gflop/s``: regression when throughput drops by more than ``tolerance``.
+* ``gflop/s``: regression when throughput drops by more than ``tolerance``;
+* ``roofline_frac`` fractions (the measured-roofline section's achieved /
+  ceiling ratio): regression when the fraction drops by more than
+  ``tolerance`` — both sides are normalised by the *same-run* stream
+  ceiling, so the ratio survives minor host-speed drift.
 
-Counters, fractions and series points are identity/structure metrics, not
-perf, and are ignored.  Exit codes: 0 — no regression (also when the
+Other counters, fractions and series points are identity/structure metrics,
+not perf, and are ignored.  Exit codes: 0 — no regression (also when the
 baseline file is missing or was recorded on different hardware: the gate
 warns and passes, so a fresh branch or a device change never blocks CI);
 1 — at least one regression, each printed with old/new/ratio.
@@ -69,6 +73,13 @@ def compare(new_records, base_records, *, tolerance: float, min_us: float):
                     "ratio": new_us / max(base_us, 1e-12),
                 })
         elif unit == "gflop/s":
+            if new_v < base_v * (1 - tolerance):
+                regressions.append({
+                    "section": key[0], "name": key[1], "unit": unit,
+                    "baseline": base_v, "new": new_v,
+                    "ratio": new_v / max(base_v, 1e-12),
+                })
+        elif unit == "fraction" and key[1].endswith("roofline_frac"):
             if new_v < base_v * (1 - tolerance):
                 regressions.append({
                     "section": key[0], "name": key[1], "unit": unit,

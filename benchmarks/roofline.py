@@ -1,49 +1,131 @@
-"""§Roofline report: reads the dry-run JSON dumps and renders the per-cell
-three-term table (compute / memory / collective seconds, dominant term,
-MODEL_FLOPS ratio) used by EXPERIMENTS.md.
+"""Measured SpMV roofline: achieved bytes/s against a stream-bandwidth ceiling.
 
-Run after ``python -m repro.launch.dryrun --all --json dryrun_single_pod.json``.
+Replaces the old dry-run-JSON reader.  For each suite matrix × format
+(csrk / sellcs) × value dtype (f32 / bf16 / int8) × batch width B the harness
+
+1. prepares the operator (``prepare(..., format=..., value_dtype=...)``),
+2. takes its modeled traffic from ``PreparedSpMV.modeled_bytes()`` — the same
+   per-tile byte model (``tuner.tile_bytes_model`` accounting) the
+   constant-time tuner minimises,
+3. times the jnp tile-view oracle (identical arithmetic and memory layout to
+   the Pallas kernel; interpret-mode Pallas wall time is Python-bound and not
+   comparable — see the NOTE in benchmarks/formats.py),
+4. reports achieved bytes/s and ``roofline_frac`` = achieved / ceiling, where
+   the ceiling is a *measured* saxpy stream bandwidth on the same backend —
+   not a datasheet number, so the fraction is meaningful on any host.
+
+For B > 1 the matrix stream is amortised over the batch: modeled bytes grow
+only by the extra (n + m)·4 vector traffic per additional column.
+
+The harness also emits one modeled-bytes row per matrix comparing the
+monolithic tile layout against the slot-bucketed one — bucketing drops only
+trailing all-padding slots, so ``bucketed_kb ≤ monolithic_kb`` always, and
+``saved_frac`` > 0 whenever per-tile nnz varies.  check_regression.py gates
+``roofline_frac`` drops the same way it gates time regressions.
 """
 from __future__ import annotations
 
-import json
-import os
-import sys
+import numpy as np
+import jax
+import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_fn
+from repro.configs.spmv_suite import SUITE
+from repro.core.spmv import prepare
+from repro.kernels import ref
+
+# (format, value_dtype) cells; B widths come from run()
+DTYPES = ("f32", "bf16", "int8")
+FORMATS = ("csrk", "sellcs")
+QUICK_IDS = (1, 9, 16)          # one graph, one PDE, one structural
+FULL_IDS = (1, 6, 9, 12, 16)
 
 
-def run(path: str = "roofline_merged.json") -> list:
-    if not os.path.exists(path) and os.path.exists("dryrun_single_pod.json"):
-        path = "dryrun_single_pod.json"
-    if not os.path.exists(path):
-        print(f"# {path} missing — run the dry-run sweep first", file=sys.stderr)
-        return []
-    cells = json.load(open(path))
-    rows = []
-    for c in cells:
-        if c.get("variant") == "baseline":
+def measure_stream_bandwidth(nbytes: int = 1 << 26) -> float:
+    """Measured saxpy ceiling in bytes/s: y = 2·x + y streams 3 f32 arrays
+    (read x, read y, write y) of ``nbytes`` each — the classic STREAM triad
+    shape, sized well past any cache."""
+    n = nbytes // 4
+    x = jnp.ones((n,), jnp.float32)
+    y = jnp.ones((n,), jnp.float32)
+    saxpy = jax.jit(lambda u, v: u * 2.0 + v)
+    t = time_fn(saxpy, x, y, warmup=3, iters=10)
+    return 3 * n * 4 / t
+
+
+def _oracle(op, x):
+    """The jnp computation matching what the operator's Pallas kernel does
+    (same compressed arrays, same dequantization), in the reordered space."""
+    if op.sell_tiles is not None:
+        return ref.spmv_sellcs_tiles(op.sell_tiles, x)
+    if op.tile_buckets is not None:
+        return ref.spmv_csrk_buckets(op.tile_buckets, x)
+    return ref.spmv_csrk_tiles(op.tiles, x)
+
+
+def run(scale: int = 2048, quick: bool = False, ids=None) -> list:
+    if ids is None:
+        ids = QUICK_IDS if quick else FULL_IDS
+    widths = (1,) if quick else (1, 8)
+
+    ceiling = measure_stream_bandwidth(1 << 24 if quick else 1 << 26)
+    rows = [{"stream": "saxpy_triad", "ceiling_gbs": round(ceiling / 1e9, 3)}]
+
+    byte_rows, meas_rows = [], []
+    for entry in SUITE:
+        if entry.id not in ids:
             continue
-        t = c["terms"]
-        peak = max(t.values())
-        rows.append({
-            "arch": c["arch"],
-            "shape": c["shape"],
-            "mesh": c["mesh"],
-            "compute_ms": round(t["compute_s"] * 1e3, 3),
-            "memory_ms": round(t["memory_s"] * 1e3, 3),
-            "collective_ms": round(t["collective_s"] * 1e3, 3),
-            "dominant": c["dominant"],
-            "roofline_fraction": round(t["compute_s"] / peak, 4) if peak else 0,
-            "useful_flops_ratio": round(c["useful_flops_ratio"], 3),
-            "hbm_per_dev_gib": round(c.get("peak_hbm_per_device", 0) / 2**30, 2),
-            "fits": c.get("fits_hbm", True),
-        })
-    emit(rows, ["arch", "shape", "mesh", "compute_ms", "memory_ms",
-                "collective_ms", "dominant", "roofline_fraction",
-                "useful_flops_ratio", "hbm_per_dev_gib", "fits"])
-    return rows
+        A = entry.build(scale)
+        rng = np.random.default_rng(0)
+
+        for fmt in FORMATS:
+            for vd in DTYPES:
+                op = prepare(A, device="tpu_v5e", reorder="bandk",
+                             format=fmt, value_dtype=vd)
+                if fmt == "csrk" and op.tiles is None:
+                    continue  # k == 2 collapse: no tile view to measure
+                if vd == "f32" and fmt == "csrk":
+                    # one bytes row per matrix: layout comparison is
+                    # dtype/format independent (slot counts only)
+                    mono = op.tiles.modeled_bytes()
+                    buck = op.tile_buckets.modeled_bytes()
+                    byte_rows.append({
+                        "matrix": entry.name,
+                        "metric": "modeled_bytes",
+                        "monolithic_kb": round(mono / 1024, 1),
+                        "bucketed_kb": round(buck / 1024, 1),
+                        "saved_frac": round(1 - buck / mono, 4),
+                    })
+                xr = jnp.asarray(
+                    rng.standard_normal(A.n), jnp.float32
+                )[jnp.asarray(op.perm)]
+                base_bytes = op.modeled_bytes()
+                for B in widths:
+                    xb = (xr if B == 1
+                          else jnp.tile(xr[:, None], (1, B)))
+                    t = time_fn(lambda v: _oracle(op, v), xb,
+                                warmup=2, iters=5)
+                    nb = base_bytes + (B - 1) * (A.n + A.m) * 4
+                    achieved = nb / t
+                    meas_rows.append({
+                        "matrix": entry.name,
+                        "format": fmt,
+                        "dtype": vd,
+                        "B": B,
+                        "time_us": round(t * 1e6, 1),
+                        "gbytes_per_s": round(achieved / 1e9, 3),
+                        "roofline_frac": round(achieved / ceiling, 4),
+                    })
+
+    emit(rows, ["stream", "ceiling_gbs"])
+    emit(byte_rows, ["matrix", "metric", "monolithic_kb", "bucketed_kb",
+                     "saved_frac"])
+    emit(meas_rows, ["matrix", "format", "dtype", "B", "time_us",
+                     "gbytes_per_s", "roofline_frac"])
+    return rows + byte_rows + meas_rows
 
 
 if __name__ == "__main__":
-    run(sys.argv[1] if len(sys.argv) > 1 else "dryrun_single_pod.json")
+    import sys
+
+    run(quick="--quick" in sys.argv)

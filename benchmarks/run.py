@@ -123,9 +123,10 @@ def main() -> None:
         from benchmarks import scaling
         records += _flatten("scaling", scaling.run())
     if section("roofline"):
-        print("\n## roofline (EXPERIMENTS §Roofline; from dry-run JSON)")
+        print("\n## roofline (measured stream ceiling vs modeled SpMV bytes)")
         from benchmarks import roofline
-        records += _flatten("roofline", roofline.run())
+        records += _flatten("roofline", roofline.run(scale=scale,
+                                                     quick=args.quick))
     if args.json:
         from repro.obs import get_registry, write_records
 

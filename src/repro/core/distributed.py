@@ -314,8 +314,10 @@ class ShardedPreparedSpMV:
     t_lcol: Optional[jax.Array] = None    # csrk: [D, Tp, S]
     t_lrow: Optional[jax.Array] = None    # csrk: [D, Tp, S]
     t_win: Optional[jax.Array] = None     # csrk: [D, Tp]
+    t_scale: Optional[jax.Array] = None   # csrk int8: [D, Tp, S/group]
     s_vals: Optional[jax.Array] = None    # sellcs: [D, Tp, C, W]
     s_cols: Optional[jax.Array] = None    # sellcs: [D, Tp, C, W]
+    s_scale: Optional[jax.Array] = None   # sellcs int8: [D, Tp, C, W/group]
     c_csr: Optional[ShardedCSR] = None    # csr2 fallback (oracle path)
 
     def __post_init__(self):
@@ -432,26 +434,31 @@ def _build_sharded_call(op: ShardedPreparedSpMV):
         nblocks = -(-tiles.shape[1] // W)
         Lp = (nblocks + 1) * W
         gather_mode, interpret = base.gather_mode, base.interpret
+        chunk = base.params.gather_chunk
+        has_scale = op.t_scale is not None
 
-        def body(v, lc, lr, wb, xs):
-            xp = distribute_x(xs, Lp)
+        def body(v, lc, lr, wb, *rest):
+            # rest = ([stacked scales,] x shard) — int8 values carry scales
+            sc = rest[0][0] if has_scale else None
+            xp = distribute_x(rest[-1], Lp)
             return spmv_csrk_tiles_pallas(
-                v[0], lc[0], lr[0], wb[0], xp,
-                rows_per_tile=R, window=W,
+                v[0], lc[0], lr[0], wb[0], xp, sc,
+                rows_per_tile=R, window=W, gather_chunk=chunk,
                 gather_mode=gather_mode, interpret=interpret,
             )
 
         f = shard_map(
             body, mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis), P(axis), x_spec),
+            in_specs=(P(axis),) * (5 if has_scale else 4) + (x_spec,),
             out_specs=P(axis), check_rep=False,
         )
         rem = tiles.remainder_nnz
         rem_row, rem_col, rem_val = tiles.rem_row, tiles.rem_col, tiles.rem_val
 
-        def call(tv, tlc, tlr, twin, x):
+        def call(*args):
+            x = args[-1]
             xin = _pad_rows(x, Lp if strategy == "replicated" else D * Rs)
-            y = f(tv, tlc, tlr, twin, xin)[:m]
+            y = f(*args[:-1], xin)[:m]
             if rem:
                 rv = rem_val.astype(y.dtype)
                 if x.ndim == 2:
@@ -460,7 +467,10 @@ def _build_sharded_call(op: ShardedPreparedSpMV):
             return y
 
         jitted = jax.jit(call)
-        return lambda x: jitted(op.t_vals, op.t_lcol, op.t_lrow, op.t_win, x)
+        extra = (op.t_scale,) if has_scale else ()
+        return lambda x: jitted(
+            op.t_vals, op.t_lcol, op.t_lrow, op.t_win, *extra, x
+        )
 
     if base.backend == "sellcs":
         from repro.kernels.spmv_sellcs import spmv_sellcs_pallas
@@ -470,27 +480,33 @@ def _build_sharded_call(op: ShardedPreparedSpMV):
         m_pad = int(st.row_perm.shape[0])
         row_perm = st.row_perm
         gather_mode, interpret = base.gather_mode, base.interpret
+        chunk = base.params.gather_chunk
+        has_scale = op.s_scale is not None
 
-        def body(v, c, xs):
-            xp = distribute_x(xs, n_pad)
+        def body(v, c, *rest):
+            sc = rest[0][0] if has_scale else None
+            xp = distribute_x(rest[-1], n_pad)
             return spmv_sellcs_pallas(
-                v[0], c[0], xp, gather_mode=gather_mode, interpret=interpret
+                v[0], c[0], xp, sc, gather_chunk=chunk,
+                gather_mode=gather_mode, interpret=interpret,
             )
 
         f = shard_map(
             body, mesh=mesh,
-            in_specs=(P(axis), P(axis), x_spec),
+            in_specs=(P(axis),) * (3 if has_scale else 2) + (x_spec,),
             out_specs=P(axis), check_rep=False,
         )
 
-        def call(sv, sc, x):
+        def call(*args):
+            x = args[-1]
             xin = _pad_rows(x, n_pad if strategy == "replicated" else D * Rs)
-            y_sorted = f(sv, sc, xin)[:m_pad]     # σ-sorted row order
+            y_sorted = f(*args[:-1], xin)[:m_pad]     # σ-sorted row order
             out = jnp.zeros((m + 1,) + y_sorted.shape[1:], y_sorted.dtype)
             return out.at[row_perm].set(y_sorted)[:m]
 
         jitted = jax.jit(call)
-        return lambda x: jitted(op.s_vals, op.s_cols, x)
+        extra = (op.s_scale,) if has_scale else ()
+        return lambda x: jitted(op.s_vals, op.s_cols, *extra, x)
 
     # CSR-2 / CPU fallback: pure-jnp oracle inside shard_map (no tile view).
     S = op.c_csr
@@ -593,6 +609,8 @@ def shard_prepared(
             t_lrow=_stack_shards(np.asarray(tiles.local_row), D, Tp),
             t_win=_stack_shards(wb, D, Tp),
         )
+        if tiles.val_scale is not None:
+            kw.update(t_scale=_stack_shards(np.asarray(tiles.val_scale), D, Tp))
         src = A if A is not None else base.csrk.csr
     elif base.backend == "sellcs":
         st = base.sell_tiles
@@ -610,6 +628,8 @@ def shard_prepared(
             s_vals=_stack_shards(v, D, Tp),
             s_cols=_stack_shards(c, D, Tp),
         )
+        if st.val_scale is not None:
+            kw.update(s_scale=_stack_shards(np.asarray(st.val_scale), D, Tp))
         src = A
     else:
         # CSR-2 fallback: no tile view — raw row partitioning + oracle.

@@ -18,7 +18,9 @@ from repro.sparse import (  # noqa: F401
     CSR5LikeMatrix,
     CSRMatrix,
     CSRkMatrix,
+    CSRkTileBuckets,
     CSRkTiles,
+    bucket_tiles,
     ELLMatrix,
     SELLCSMatrix,
     SELLCSTiles,

@@ -28,10 +28,12 @@ import repro.core.tuner as tuner_mod
 from repro.sparse import (
     CSRMatrix,
     CSRkMatrix,
+    CSRkTileBuckets,
     CSRkTiles,
     MatrixStats,
     SELLCSMatrix,
     SELLCSTiles,
+    bucket_tiles,
     build_csrk,
     compute_stats,
     select_format,
@@ -70,6 +72,8 @@ class PreparedSpMV:
     sell: Optional[SELLCSMatrix] = None
     sell_tiles: Optional[SELLCSTiles] = None
     stats: Optional[MatrixStats] = None
+    tile_buckets: Optional[CSRkTileBuckets] = None
+    value_dtype: str = "f32"
 
     def __post_init__(self):
         # Device-resident permutation arrays, built once at prepare() time so
@@ -98,14 +102,21 @@ class PreparedSpMV:
           the extra right-hand sides are nearly free — the SELL-C-σ/CG
           amortization argument).
         """
+        chunk = self.params.gather_chunk
         if self.backend == "sellcs":
             return kops.spmv_sellcs(
                 self.sell_tiles, x, gather_mode=self.gather_mode,
-                interpret=self.interpret,
+                gather_chunk=chunk, interpret=self.interpret,
+            )
+        if self.tile_buckets is not None:
+            return kops.spmv_csrk_bucketed(
+                self.tile_buckets, x, gather_mode=self.gather_mode,
+                gather_chunk=chunk, interpret=self.interpret,
             )
         if self.tiles is not None:
             return kops.spmv_csrk(
-                self.tiles, x, gather_mode=self.gather_mode, interpret=self.interpret
+                self.tiles, x, gather_mode=self.gather_mode,
+                gather_chunk=chunk, interpret=self.interpret,
             )
         # CPU path (CSR-2): hierarchy collapses to the segmented CSR kernel;
         # super-rows drive the parallel partitioning, which XLA:CPU derives
@@ -145,6 +156,22 @@ class PreparedSpMV:
         if self.backend == "sellcs":
             return self.sell.padding_overhead()
         return self.tiles.padding_overhead() if self.tiles is not None else 0.0
+
+    def modeled_bytes(self) -> int:
+        """Modeled HBM bytes one SpMV moves (the roofline numerator).
+
+        Uses the executed layout: bucketed CSR-k sums per-bucket launches,
+        monolithic uses worst-tile padding, SELL-C-σ uses chunk widths; the
+        CPU/CSR fallback counts the raw CSR streams.
+        """
+        if self.backend == "sellcs":
+            return self.sell_tiles.modeled_bytes()
+        if self.tile_buckets is not None:
+            return self.tile_buckets.modeled_bytes()
+        if self.tiles is not None:
+            return self.tiles.modeled_bytes()
+        m, n = self.csrk.shape
+        return self.csrk.nnz * 8 + (m + 1) * 4 + m * 4 + n * 4
 
 
 def _record_prepared(op: PreparedSpMV) -> PreparedSpMV:
@@ -186,6 +213,49 @@ def _record_prepared(op: PreparedSpMV) -> PreparedSpMV:
     return op
 
 
+def _auto_value_dtype(A: CSRMatrix, stats: Optional[MatrixStats]) -> str:
+    """Pick the cheapest value dtype whose SpMV error clears the bound.
+
+    One host-side probe SpMV against a fixed random x per candidate — int8
+    (grouped scales) is tried first, then bf16; the tolerance is half the
+    acceptance bound (int8 ≤ 2.5e-2, bf16 ≤ 5e-3 relative) so suite noise
+    cannot push an auto-routed matrix over the documented limit.  ``stats``
+    (when the auto-format pass already computed them) short-circuits the
+    probe for tiny matrices where compression cannot pay for its scales.
+    """
+    from repro.optim.compress import (
+        INT8_GROUP, dequantize_int8_grouped, quantize_int8_grouped,
+    )
+
+    nnz = A.nnz
+    if nnz < 4 * INT8_GROUP or (stats is not None and stats.nnz < 4 * INT8_GROUP):
+        return "f32"
+    vl = np.asarray(A.vals, np.float32)
+    ci = np.asarray(A.col_idx)
+    rp = np.asarray(A.row_ptr)
+    rows = np.repeat(np.arange(A.m), rp[1:] - rp[:-1])
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(A.shape[1]).astype(np.float32)
+    y = np.zeros(A.m, np.float32)
+    np.add.at(y, rows, vl * x[ci])
+    scale = max(float(np.linalg.norm(y)), 1e-30)
+
+    pad = (-nnz) % INT8_GROUP
+    vpad = np.pad(vl, (0, pad))
+    q, s = quantize_int8_grouped(vpad, group=INT8_GROUP)
+    v8 = dequantize_int8_grouped(q, s, group=INT8_GROUP)[:nnz]
+    y8 = np.zeros(A.m, np.float32)
+    np.add.at(y8, rows, v8 * x[ci])
+    if np.linalg.norm(y8 - y) / scale <= 2.5e-2:
+        return "int8"
+    v16 = np.asarray(jnp.asarray(vl).astype(jnp.bfloat16).astype(jnp.float32))
+    y16 = np.zeros(A.m, np.float32)
+    np.add.at(y16, rows, v16 * x[ci])
+    if np.linalg.norm(y16 - y) / scale <= 5e-3:
+        return "bf16"
+    return "f32"
+
+
 def prepare(
     A: CSRMatrix,
     device: str = "tpu_v5e",
@@ -194,10 +264,13 @@ def prepare(
     reorder: str = "bandk",           # "bandk" | "rcm" | "natural"
     params: tuner_mod.TuningParams | None = None,
     gather_mode: str = "onehot",
+    gather_chunk: int | None = None,
     interpret: bool = True,
     adaptive: bool = False,
     sell_c: int = 8,
     sell_sigma: int | None = None,
+    value_dtype: str = "f32",         # "f32" | "bf16" | "int8" | "auto"
+    tile_layout: str = "bucketed",    # "bucketed" | "monolithic"
     mesh=None,
     shard_axis: str = "data",
     x_strategy: str = "auto",
@@ -228,11 +301,26 @@ def prepare(
       params: explicit :class:`~repro.core.tuner.TuningParams`; None runs the
         constant-time tuner.
       gather_mode: in-kernel x-gather ("onehot" MXU matmuls | "take").
+      gather_chunk: one-hot gather chunk width (a 128 multiple).  None defers
+        to the tuner (``TuningParams.gather_chunk``, which the fitted device
+        model can set); an explicit value overrides both.
       interpret: run Pallas in interpret mode (True off-TPU).
       adaptive: replace the paper's rdensity-only formula with the
         variance-aware bytes-model tuner (beyond-paper; CSR-k path only).
       sell_c / sell_sigma: SELL-C-σ chunk height and sorting window
         (defaults: C=8 sublanes, σ=16·C).
+      value_dtype: storage dtype of the kernel value stream — "f32" (exact),
+        "bf16" (2 B/value), "int8" (1 B/value + one f32 scale per 128-slot
+        group, the grouped-scale idiom from :mod:`repro.optim.compress`), or
+        "auto" (probe SpMV picks the cheapest dtype within the documented
+        error bounds: int8 ≤ 2.5e-2, bf16 ≤ 5e-3 relative).  Accumulation is
+        always f32; indices and the COO remainder are unaffected.  The
+        CPU/CSR-2 fallback path always computes in f32.
+      tile_layout: CSR-k tile memory layout — "bucketed" (default: tiles
+        grouped by rounded-up nnz, one Pallas launch per slot bucket;
+        bit-for-bit identical to monolithic for f32, strictly fewer HBM
+        bytes whenever tile nnz varies) or "monolithic" (single launch,
+        every tile padded to the worst tile's slots).
       mesh: optional :class:`jax.sharding.Mesh`.  When given, the prepared
         operator is partitioned over ``shard_axis`` and returned as a
         :class:`~repro.core.distributed.ShardedPreparedSpMV` — same call
@@ -250,10 +338,14 @@ def prepare(
       ``apply_original`` works in the matrix's original index space.
     """
     if mesh is not None:
+        # The sharded operator partitions the *monolithic* tile view (whole
+        # tiles per shard), so the bucketed layout is not built here.
         base = prepare(
             A, device, format=format, reorder=reorder, params=params,
-            gather_mode=gather_mode, interpret=interpret, adaptive=adaptive,
+            gather_mode=gather_mode, gather_chunk=gather_chunk,
+            interpret=interpret, adaptive=adaptive,
             sell_c=sell_c, sell_sigma=sell_sigma,
+            value_dtype=value_dtype, tile_layout="monolithic",
         )
         from repro.core.distributed import shard_prepared
 
@@ -261,23 +353,34 @@ def prepare(
         return shard_prepared(
             base, mesh, axis=shard_axis, x_strategy=x_strategy, A=src
         )
+    if tile_layout not in ("bucketed", "monolithic"):
+        raise ValueError(
+            f"unknown tile_layout {tile_layout!r} (expected bucketed|monolithic)"
+        )
     reg = get_registry()
     stats = None
     if format == "auto":
         with reg.timer("prepare", "phase.stats"):
             stats = compute_stats(A)
             format = select_format(stats, device)
+    if value_dtype == "auto":
+        with reg.timer("prepare", "phase.value_dtype"):
+            value_dtype = _auto_value_dtype(A, stats)
+        reg.counter("prepare", f"value_dtype.{value_dtype}")
     if format == "sellcs":
         with reg.timer("prepare", "phase.tile_build"):
             sell = sellcs_from_csr(A, C=sell_c, sigma=sell_sigma)
-            sell_tiles = tiles_from_sellcs(sell)
+            sell_tiles = tiles_from_sellcs(sell, value_dtype=value_dtype)
+        sell_params = tuner_mod.TuningParams(
+            ssrs=1, srs=sell_c, k=1, use_inner_parallel=True
+        )
+        if gather_chunk is not None:
+            sell_params = dataclasses.replace(sell_params, gather_chunk=gather_chunk)
         return _record_prepared(PreparedSpMV(
             csrk=None,
             tiles=None,
             perm=np.arange(A.m),
-            params=tuner_mod.TuningParams(
-                ssrs=1, srs=sell_c, k=1, use_inner_parallel=True
-            ),
+            params=sell_params,
             device=device,
             gather_mode=gather_mode,
             interpret=interpret,
@@ -285,6 +388,7 @@ def prepare(
             sell=sell,
             sell_tiles=sell_tiles,
             stats=stats,
+            value_dtype=value_dtype,
         ))
     if format != "csrk":
         raise ValueError(f"unknown format {format!r} (expected auto|csrk|sellcs)")
@@ -312,14 +416,19 @@ def prepare(
                 )
             else:
                 params = tuner_mod.tune(Ar.rdensity, device=device, m=Ar.m)
+        if gather_chunk is not None:
+            params = dataclasses.replace(params, gather_chunk=gather_chunk)
 
     with reg.timer("prepare", "phase.tile_build"):
         if params.k >= 3 and device not in ("cpu", "rome", "icelake"):
             csrk = build_csrk(Ar, srs=params.srs, ssrs=params.ssrs, k=3)
-            tiles = tiles_from_csrk(csrk)
+            tiles = tiles_from_csrk(csrk, value_dtype=value_dtype)
+            buckets = bucket_tiles(tiles) if tile_layout == "bucketed" else None
         else:
             csrk = build_csrk(Ar, srs=params.srs, k=2)
             tiles = None
+            buckets = None
+            value_dtype = "f32"   # CSR-2/CPU fallback computes on raw CSR
     return _record_prepared(PreparedSpMV(
         csrk=csrk,
         tiles=tiles,
@@ -330,6 +439,8 @@ def prepare(
         interpret=interpret,
         backend="csrk",
         stats=stats,
+        tile_buckets=buckets,
+        value_dtype=value_dtype,
     ))
 
 

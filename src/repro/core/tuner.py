@@ -43,6 +43,7 @@ class TuningParams:
     srs: int           # rows per super-row
     k: int             # hierarchy depth
     use_inner_parallel: bool  # GPUSpMV-3 vs -3.5 analogue (lane-dim reduction)
+    gather_chunk: int = 512   # one-hot gather chunk width (128 multiple)
 
     @property
     def rows_per_ssr(self) -> int:
@@ -51,13 +52,19 @@ class TuningParams:
 
 @dataclasses.dataclass(frozen=True)
 class DeviceModel:
-    """Fitted ⌊a − b·ln(rdensity)⌉ model plus density-case corrections."""
+    """Fitted ⌊a − b·ln(rdensity)⌉ model plus density-case corrections.
+
+    ``gather_chunk`` is the device's preferred one-hot gather chunk width —
+    hand-set for the builtin models, measured by
+    ``benchmarks/fit_device_model.py`` for fitted ones.
+    """
 
     name: str
     ssrs_a: float
     ssrs_b: float
     srs_a: float
     srs_b: float
+    gather_chunk: int = 512
 
     def base(self, rdensity: float) -> Tuple[int, int]:
         rd = max(rdensity, 1.0)
@@ -74,6 +81,75 @@ AMPERE = DeviceModel("ampere", ssrs_a=9.175, ssrs_b=1.32, srs_a=20.500, srs_b=3.
 TPU_V5E = DeviceModel("tpu_v5e", ssrs_a=9.0, ssrs_b=1.10, srs_a=12.0, srs_b=1.60)
 
 DEVICES: Dict[str, DeviceModel] = {d.name: d for d in (VOLTA, AMPERE, TPU_V5E)}
+
+
+# ---------------------------------------------------------------------------
+# measured-model loading (the calibration loop closed: see
+# benchmarks/fit_device_model.py and docs/tuning.md)
+# ---------------------------------------------------------------------------
+
+#: Installed fitted model for the TPU path; None → resolve from the
+#: ``REPRO_DEVICE_MODEL`` env var once, falling back to hand-set TPU_V5E.
+_ACTIVE_TPU_MODEL: DeviceModel | None = None
+_ENV_RESOLVED = False
+
+
+def load_fitted_device_model(
+    path: str, name: str = "tpu_v5e"
+) -> DeviceModel:
+    """Load fitted ``(a, b)`` constants written by benchmarks/fit_device_model.py.
+
+    The file maps device name → ``{"ssrs": [a, b], "srs": [a, b],
+    "gather_chunk": g}``.  A missing/unreadable file or absent device entry
+    falls back to the hand-set model in :data:`DEVICES` — the measured model
+    is an accelerant, never a requirement (paper Sec. 4's portability).
+    """
+    import json
+    import os
+
+    fallback = DEVICES.get(name, TPU_V5E)
+    if not path or not os.path.exists(path):
+        return fallback
+    try:
+        with open(path) as fh:
+            entry = json.load(fh).get(name)
+        if entry is None:
+            return fallback
+        return DeviceModel(
+            name=name,
+            ssrs_a=float(entry["ssrs"][0]),
+            ssrs_b=float(entry["ssrs"][1]),
+            srs_a=float(entry["srs"][0]),
+            srs_b=float(entry["srs"][1]),
+            gather_chunk=int(entry.get("gather_chunk", fallback.gather_chunk)),
+        )
+    except (OSError, ValueError, KeyError, TypeError):
+        return fallback
+
+
+def use_device_model(model: DeviceModel | None) -> None:
+    """Install a (fitted) model for :func:`tune_tpu`; None resets to the
+    env-var / hand-set resolution."""
+    global _ACTIVE_TPU_MODEL, _ENV_RESOLVED
+    _ACTIVE_TPU_MODEL = model
+    _ENV_RESOLVED = model is not None
+
+
+def active_tpu_model() -> DeviceModel:
+    """The model :func:`tune_tpu` currently runs on.
+
+    Resolution order: :func:`use_device_model` install → the
+    ``REPRO_DEVICE_MODEL`` env var (a fit_device_model.py JSON, read once)
+    → the hand-set :data:`TPU_V5E`.
+    """
+    global _ACTIVE_TPU_MODEL, _ENV_RESOLVED
+    if not _ENV_RESOLVED:
+        import os
+
+        env = os.environ.get("REPRO_DEVICE_MODEL", "")
+        _ACTIVE_TPU_MODEL = load_fitted_device_model(env) if env else TPU_V5E
+        _ENV_RESOLVED = True
+    return _ACTIVE_TPU_MODEL or TPU_V5E
 
 
 def tune_volta(rdensity: float) -> TuningParams:
@@ -112,11 +188,38 @@ def tune_ampere(rdensity: float) -> TuningParams:
     return TuningParams(max(ssrs, 1), max(srs, 1), k=3, use_inner_parallel=rdensity >= 8)
 
 
-def tune_cpu(rdensity: float, constant_time: bool = True) -> TuningParams:
-    """CPU uses CSR-2 (paper Sec. 4.2); constant-time choice is SRS=96."""
+def tune_cpu(
+    rdensity: float,
+    constant_time: bool = True,
+    row_ptr: np.ndarray | None = None,
+) -> TuningParams:
+    """CPU uses CSR-2 (paper Sec. 4.2); constant-time choice is SRS=96.
+
+    With ``constant_time=False`` the paper's per-matrix SRS sweep runs
+    instead: each candidate in :data:`CPU_SRS_SWEEP` is scored by its total
+    padded super-row slots (``num_SRs × max SR nnz`` — the load-imbalance
+    proxy a work-stealing CPU schedule pays for) and the smallest-bytes
+    candidate wins, ties going to the larger SRS (fewer, fatter tasks).
+    This requires ``row_ptr``; omitting it raises, because silently falling
+    back to the fixed constant would reintroduce the dead branch this
+    signature replaces.
+    """
     del rdensity
-    srs = CPU_FIXED_SRS if constant_time else CPU_FIXED_SRS
-    return TuningParams(ssrs=1, srs=srs, k=2, use_inner_parallel=False)
+    if constant_time:
+        return TuningParams(ssrs=1, srs=CPU_FIXED_SRS, k=2, use_inner_parallel=False)
+    if row_ptr is None:
+        raise ValueError("tune_cpu(constant_time=False) needs row_ptr for the SRS sweep")
+    rp = np.asarray(row_ptr, np.int64)
+    m = len(rp) - 1
+    best_srs, best_cost = CPU_FIXED_SRS, None
+    for srs in CPU_SRS_SWEEP:
+        starts = np.arange(0, m, srs)
+        ends = np.minimum(starts + srs, m)
+        sr_nnz = rp[ends] - rp[starts]
+        cost = int(len(starts) * sr_nnz.max(initial=1))
+        if best_cost is None or cost < best_cost or (cost == best_cost and srs > best_srs):
+            best_srs, best_cost = srs, cost
+    return TuningParams(ssrs=1, srs=best_srs, k=2, use_inner_parallel=False)
 
 
 def tune_tpu(rdensity: float, m: int | None = None) -> TuningParams:
@@ -129,8 +232,13 @@ def tune_tpu(rdensity: float, m: int | None = None) -> TuningParams:
         paper's experimentally-determined rdensity ≥ 8 threshold;
       * denser matrices → shorter tiles (fewer rows) but the tile's nnz slot
         count stays near a multiple of 128 (lane count).
+
+    Runs on :func:`active_tpu_model` — the hand-set :data:`TPU_V5E` constants
+    unless a fitted model (benchmarks/fit_device_model.py) was installed via
+    :func:`use_device_model` or the ``REPRO_DEVICE_MODEL`` env var.
     """
-    ssrs, srs = TPU_V5E.base(rdensity)
+    model = active_tpu_model()
+    ssrs, srs = model.base(rdensity)
     if rdensity <= 8:
         pass
     elif rdensity <= 16:
@@ -156,7 +264,8 @@ def tune_tpu(rdensity: float, m: int | None = None) -> TuningParams:
             ssrs -= 1
         if ssrs * srs > max_rows:
             srs = max(max_rows, 1)
-    return TuningParams(ssrs, srs, k=3, use_inner_parallel=rdensity >= 8)
+    return TuningParams(ssrs, srs, k=3, use_inner_parallel=rdensity >= 8,
+                        gather_chunk=model.gather_chunk)
 
 
 def tune(rdensity: float, device: str = "tpu_v5e", m: int | None = None) -> TuningParams:
@@ -210,6 +319,30 @@ def tile_bytes_model(
     return total, useful / max(total, 1)
 
 
+def row_col_extents(
+    row_ptr: np.ndarray, col_idx: np.ndarray, m: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row min/max column, vectorized (one ``reduceat`` pass, no Python
+    loop over rows).  Empty rows get extent 0/0, matching the historical
+    per-row loop this replaces (pinned in tests/test_ordering_tuner.py).
+
+    ``reduceat`` over the *non-empty* row starts is correct because between
+    two consecutive non-empty starts there are only that row's elements —
+    empty rows contribute no slice boundaries.
+    """
+    rp = np.asarray(row_ptr, np.int64)
+    ci = np.asarray(col_idx, np.int64)
+    col_min = np.zeros(m, np.int64)
+    col_max = np.zeros(m, np.int64)
+    lengths = rp[1:] - rp[:-1]
+    ne = np.flatnonzero(lengths[:m] > 0)
+    if len(ne):
+        starts = rp[:-1][ne]
+        col_min[ne] = np.minimum.reduceat(ci, starts)
+        col_max[ne] = np.maximum.reduceat(ci, starts)
+    return col_min, col_max
+
+
 def tune_tpu_adaptive(
     row_ptr: np.ndarray,
     col_idx: np.ndarray,
@@ -221,16 +354,8 @@ def tune_tpu_adaptive(
     modeled kernel bytes.  One cheap pass per candidate (16 candidates of
     distinct tile heights) — still effectively constant-time for large m.
     """
-    # per-row column extents (one O(nnz) pass, shared by all candidates)
-    col_min = np.empty(m, np.int64)
-    col_max = np.empty(m, np.int64)
-    for i in range(m):
-        s, e = row_ptr[i], row_ptr[i + 1]
-        if e > s:
-            col_min[i] = col_idx[s:e].min()
-            col_max[i] = col_idx[s:e].max()
-        else:
-            col_min[i] = col_max[i] = 0
+    # per-row column extents (one vectorized pass, shared by all candidates)
+    col_min, col_max = row_col_extents(row_ptr, col_idx, m)
 
     seed = tune_tpu(rdensity, m=m)
     best = (seed, tile_bytes_model(row_ptr, col_min, col_max, seed.rows_per_ssr)[0])
@@ -245,7 +370,8 @@ def tune_tpu_adaptive(
             ssrs = max(min(8, h // 8), 1)
             best = (
                 TuningParams(ssrs, -(-h // ssrs), k=3,
-                             use_inner_parallel=rdensity >= 8),
+                             use_inner_parallel=rdensity >= 8,
+                             gather_chunk=seed.gather_chunk),
                 total,
             )
     return best[0]

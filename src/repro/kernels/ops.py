@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.sparse import CSRkTiles, ELLMatrix, SELLCSTiles
+from repro.sparse import CSRkTileBuckets, CSRkTiles, ELLMatrix, SELLCSTiles
 from repro.kernels import ref
 from repro.kernels.spmv_csrk import spmv_csrk_tiles_pallas
 from repro.kernels.spmv_ell import spmv_ell_pallas
@@ -58,6 +58,7 @@ def spmv_csrk(
         tiles.local_row,
         tiles.win_block,
         xp,
+        tiles.val_scale,
         rows_per_tile=tiles.rows_per_tile,
         window=tiles.window,
         gather_chunk=gather_chunk,
@@ -70,6 +71,55 @@ def spmv_csrk(
         if x.ndim == 2:
             rem_val = rem_val[:, None]
         y = y.at[tiles.rem_row].add(rem_val * x[tiles.rem_col].astype(y.dtype))
+    return y
+
+
+@annotated("repro.spmv_csrk_bucketed", count_section="kernels")
+def spmv_csrk_bucketed(
+    buckets: CSRkTileBuckets,
+    x: jax.Array,
+    *,
+    gather_mode: str = "onehot",
+    gather_chunk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Slot-bucketed CSR-k SpMV: one Pallas launch per slot bucket.
+
+    Each bucket reuses :func:`spmv_csrk_tiles_pallas` unchanged over its own
+    compacted ``[T_b, S_b]`` arrays; bucket outputs are scattered back to the
+    global tile rows via ``tile_ids`` and the COO remainder is folded once.
+    Because compaction only drops trailing padding slots, the result is
+    bit-for-bit identical to :func:`spmv_csrk` on the monolithic view for
+    f32 values (pinned in tests/test_tile_buckets.py) — only the HBM bytes
+    per launch change.
+
+    ``x`` may be [n] or [n, B], same as :func:`spmv_csrk`.
+    """
+    R = buckets.rows_per_tile
+    xp = _pad_x_to_blocks(x, buckets.window)
+    tail = x.shape[1:]
+    y_tiles = jnp.zeros((buckets.num_tiles, R) + tail, x.dtype)
+    for b, ids in zip(buckets.buckets, buckets.tile_ids):
+        y_b = spmv_csrk_tiles_pallas(
+            b.vals,
+            b.local_col,
+            b.local_row,
+            b.win_block,
+            xp,
+            b.val_scale,
+            rows_per_tile=R,
+            window=buckets.window,
+            gather_chunk=gather_chunk,
+            gather_mode=gather_mode,  # type: ignore[arg-type]
+            interpret=interpret,
+        )
+        y_tiles = y_tiles.at[ids].set(y_b.reshape((b.num_tiles, R) + tail))
+    y = y_tiles.reshape((buckets.num_tiles * R,) + tail)[: buckets.shape[0]]
+    if buckets.remainder_nnz:
+        rem_val = buckets.rem_val.astype(y.dtype)
+        if x.ndim == 2:
+            rem_val = rem_val[:, None]
+        y = y.at[buckets.rem_row].add(rem_val * x[buckets.rem_col].astype(y.dtype))
     return y
 
 
@@ -96,6 +146,7 @@ def spmv_sellcs(
         tiles.vals,
         tiles.col_idx,
         xp,
+        tiles.val_scale,
         gather_chunk=gather_chunk,
         gather_mode=gather_mode,
         interpret=interpret,

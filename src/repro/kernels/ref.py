@@ -14,11 +14,27 @@ from repro.sparse import (
     COOMatrix,
     CSRMatrix,
     CSRkMatrix,
+    CSRkTileBuckets,
     CSRkTiles,
     ELLMatrix,
     SELLCSMatrix,
+    SELLCSTiles,
 )
 from repro.obs import annotated
+
+
+def _tile_vals_f32(vals: jax.Array, val_scale) -> jax.Array:
+    """Tile values as f32: upcast bf16/f32, dequantize int8 grouped scales.
+
+    Mirrors the in-kernel dequantization (spmv_csrk._dequant_slots /
+    spmv_sellcs._dequant_chunk): scale groups run along the last (slot/lane)
+    axis, one f32 scale per ``vals.shape[-1] // val_scale.shape[-1]`` slots.
+    """
+    v = vals.astype(jnp.float32)
+    if val_scale is not None:
+        g = v.shape[-1] // val_scale.shape[-1]
+        v = v * jnp.repeat(val_scale, g, axis=-1, total_repeat_length=v.shape[-1])
+    return v
 
 
 def spmv_dense(dense: jax.Array, x: jax.Array) -> jax.Array:
@@ -102,13 +118,14 @@ def spmv_csrk_tiles(tiles: CSRkTiles, x: jax.Array) -> jax.Array:
     T, S = tiles.vals.shape
     R, W = tiles.rows_per_tile, tiles.window
     n = tiles.shape[1]
+    vals = _tile_vals_f32(tiles.vals, tiles.val_scale).astype(x.dtype)
     # absolute columns, clamped (padding slots have val 0 so clamping is inert)
     abs_col = jnp.minimum(
         tiles.win_block[:, None] * W + tiles.local_col, n - 1
     )
     seg = tiles.local_row + (jnp.arange(T, dtype=jnp.int32) * R)[:, None]
     if x.ndim == 2:
-        contrib = tiles.vals[..., None] * x[abs_col]       # [T, S, B]
+        contrib = vals[..., None] * x[abs_col]             # [T, S, B]
         y = jax.ops.segment_sum(
             contrib.reshape(T * S, -1), seg.reshape(-1), num_segments=T * R
         )
@@ -116,12 +133,53 @@ def spmv_csrk_tiles(tiles: CSRkTiles, x: jax.Array) -> jax.Array:
         if tiles.remainder_nnz:
             y = y.at[tiles.rem_row].add(tiles.rem_val[:, None] * x[tiles.rem_col])
         return y
-    contrib = tiles.vals * x[abs_col]                      # [T, S]
+    contrib = vals * x[abs_col]                            # [T, S]
     y = jax.ops.segment_sum(contrib.reshape(-1), seg.reshape(-1), num_segments=T * R)
     y = y[: tiles.shape[0]]
     if tiles.remainder_nnz:
         y = y.at[tiles.rem_row].add(tiles.rem_val * x[tiles.rem_col])
     return y
+
+
+@annotated("repro.oracle.spmv_csrk_buckets", count_section="oracles")
+def spmv_csrk_buckets(buckets: CSRkTileBuckets, x: jax.Array) -> jax.Array:
+    """Oracle for the slot-bucketed tile view: per-bucket tile oracle runs,
+    scattered back to global tile rows, COO remainder folded once."""
+    R = buckets.rows_per_tile
+    tail = x.shape[1:]
+    y_tiles = jnp.zeros((buckets.num_tiles, R) + tail, x.dtype)
+    for b, ids in zip(buckets.buckets, buckets.tile_ids):
+        y_b = spmv_csrk_tiles(b, x)
+        y_tiles = y_tiles.at[ids].set(y_b.reshape((b.num_tiles, R) + tail))
+    y = y_tiles.reshape((buckets.num_tiles * R,) + tail)[: buckets.shape[0]]
+    if buckets.remainder_nnz:
+        rem_val = buckets.rem_val
+        if x.ndim == 2:
+            rem_val = rem_val[:, None]
+        y = y.at[buckets.rem_row].add(rem_val * x[buckets.rem_col])
+    return y
+
+
+@annotated("repro.oracle.spmv_sellcs_tiles", count_section="oracles")
+def spmv_sellcs_tiles(tiles: SELLCSTiles, x: jax.Array) -> jax.Array:
+    """Oracle for the uniform-width SELL-C-σ Pallas view (value-dtype aware).
+
+    The canonical-container oracle (:func:`spmv_sellcs`) always runs f32;
+    this one consumes the same compressed [T, C, W] arrays the kernel does,
+    so mixed-precision tests can pin kernel == oracle exactly.
+    """
+    m, n = tiles.shape
+    vals = _tile_vals_f32(tiles.vals, tiles.val_scale).astype(x.dtype)
+    cols = jnp.minimum(tiles.col_idx, max(n, x.shape[0]) - 1)
+    if x.ndim == 2:
+        contrib = vals[..., None] * x[cols]                # [T, C, W, B]
+        y_sorted = jnp.sum(contrib, axis=2).reshape(-1, x.shape[1])
+        out = jnp.zeros((m + 1, x.shape[1]), y_sorted.dtype)
+        return out.at[tiles.row_perm].set(y_sorted)[:m]
+    contrib = vals * x[cols]                               # [T, C, W]
+    y_sorted = jnp.sum(contrib, axis=2).reshape(-1)
+    out = jnp.zeros((m + 1,), y_sorted.dtype)
+    return out.at[tiles.row_perm].set(y_sorted)[:m]
 
 
 @annotated("repro.oracle.spmv_sellcs", count_section="oracles")

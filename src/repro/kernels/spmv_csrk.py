@@ -49,29 +49,45 @@ def _reduce_onehot(contrib: jax.Array, lr: jax.Array, rows: int) -> jax.Array:
     return jnp.dot(onehot, contrib, preferred_element_type=jnp.float32)
 
 
+def _dequant_slots(v: jax.Array, scale_ref) -> jax.Array:
+    """Load the [S] value stream as f32, applying int8 grouped scales if given.
+
+    ``scale_ref`` (``[1, S/group]`` f32 or None) carries one symmetric scale
+    per slot group (see ``repro.sparse.csrk.INT8_GROUP``); bf16/f32 streams
+    arrive with ``scale_ref is None`` and only need the f32 upcast.
+    Accumulation downstream is always f32 — compression changes the bytes
+    moved, never the accumulate dtype.
+    """
+    v = v.astype(jnp.float32)
+    if scale_ref is not None:
+        s = scale_ref[0]                                            # [S/G]
+        group = v.shape[0] // s.shape[0]
+        v = v * jnp.repeat(s, group, total_repeat_length=v.shape[0])
+    return v
+
+
 def _kernel(
     win_ref,       # scalar-prefetch: [T] int32 window block indices (unused in body)
     vals_ref,      # [1, S]
     lc_ref,        # [1, S]
     lr_ref,        # [1, S]
-    x1_ref,        # [window]
-    x2_ref,        # [window]
-    y_ref,         # [rows_per_tile]
-    *,
+    *rest,         # ([scale_ref,] x1_ref [window], x2_ref [window], y_ref [R])
     rows_per_tile: int,
     gather_chunk: int,
     gather_mode: GatherMode,
 ):
     del win_ref  # consumed by the BlockSpec index maps
+    scale_ref = rest[0] if len(rest) == 4 else None
+    x1_ref, x2_ref, y_ref = rest[-3:]
     xw = jnp.concatenate([x1_ref[...], x2_ref[...]])                # [2W]
     lc = lc_ref[0]
     lr = lr_ref[0]
-    v = vals_ref[0]
+    v = _dequant_slots(vals_ref[0], scale_ref)
     if gather_mode == "take":
         gathered = jnp.take(xw, lc, axis=0).astype(jnp.float32)
     else:
         gathered = _gather_onehot(xw, lc, gather_chunk)
-    contrib = v.astype(jnp.float32) * gathered                      # [S]
+    contrib = v * gathered                                          # [S]
     y = _reduce_onehot(contrib, lr, rows_per_tile)                  # [R]
     y_ref[...] = y.astype(y_ref.dtype)
 
@@ -81,10 +97,7 @@ def _kernel_batched(
     vals_ref,      # [1, S]
     lc_ref,        # [1, S]
     lr_ref,        # [1, S]
-    x1_ref,        # [window, B]
-    x2_ref,        # [window, B]
-    y_ref,         # [rows_per_tile, B]
-    *,
+    *rest,         # ([scale_ref,] x1_ref [window,B], x2_ref [window,B], y_ref [R,B])
     rows_per_tile: int,
     gather_chunk: int,
     gather_mode: GatherMode,
@@ -96,15 +109,17 @@ def _kernel_batched(
     bandwidth-bound side) is read exactly once regardless of B.
     """
     del win_ref  # consumed by the BlockSpec index maps
+    scale_ref = rest[0] if len(rest) == 4 else None
+    x1_ref, x2_ref, y_ref = rest[-3:]
     xw = jnp.concatenate([x1_ref[...], x2_ref[...]], axis=0)        # [2W, B]
     lc = lc_ref[0]
     lr = lr_ref[0]
-    v = vals_ref[0]
+    v = _dequant_slots(vals_ref[0], scale_ref)
     if gather_mode == "take":
         gathered = jnp.take(xw, lc, axis=0).astype(jnp.float32)     # [S, B]
     else:
         gathered = _gather_onehot(xw, lc, gather_chunk)             # [S, B]
-    contrib = v.astype(jnp.float32)[:, None] * gathered             # [S, B]
+    contrib = v[:, None] * gathered                                 # [S, B]
     y = _reduce_onehot(contrib, lr, rows_per_tile)                  # [R, B]
     y_ref[...] = y.astype(y_ref.dtype)
 
@@ -119,6 +134,7 @@ def spmv_csrk_tiles_pallas(
     local_row: jax.Array,  # [T, S]
     win_block: jax.Array,  # [T]
     x_padded: jax.Array,   # [(nblocks+1) * window] or [..., B] — padded by ops.py
+    val_scale: jax.Array | None = None,  # [T, S/group] f32, int8 values only
     *,
     rows_per_tile: int,
     window: int,
@@ -130,9 +146,12 @@ def spmv_csrk_tiles_pallas(
 
     Args:
       vals / local_col / local_row: [T, S] padded per-SSR tile arrays.
+        ``vals`` may be f32, bf16, or int8; int8 requires ``val_scale``.
       win_block: [T] x-window block index per tile (scalar-prefetched).
       x_padded: [(nblocks+1)·window] vector or [·, B] block, padded by
         ops.py (or by the distributed layer's per-shard x reconstruction).
+      val_scale: optional [T, S/group] f32 per-group scales for int8 values
+        (dequantized in-kernel; accumulation stays f32).
       rows_per_tile / window: static tile geometry from :class:`CSRkTiles`.
 
     Returns:
@@ -146,7 +165,7 @@ def spmv_csrk_tiles_pallas(
     """
     if x_padded.ndim == 2:
         return _spmm_csrk_tiles_pallas_batched(
-            vals, local_col, local_row, win_block, x_padded,
+            vals, local_col, local_row, win_block, x_padded, val_scale,
             rows_per_tile=rows_per_tile, window=window,
             gather_chunk=gather_chunk, gather_mode=gather_mode,
             interpret=interpret,
@@ -157,16 +176,24 @@ def spmv_csrk_tiles_pallas(
     # x-window index maps can read it.
     from jax.experimental.pallas import tpu as pltpu
 
+    in_specs = [
+        pl.BlockSpec((1, S), lambda t, w: (t, 0)),
+        pl.BlockSpec((1, S), lambda t, w: (t, 0)),
+        pl.BlockSpec((1, S), lambda t, w: (t, 0)),
+    ]
+    operands = [vals, local_col, local_row]
+    if val_scale is not None:
+        G = val_scale.shape[1]
+        in_specs.append(pl.BlockSpec((1, G), lambda t, w: (t, 0)))
+        operands.append(val_scale)
+    in_specs += [
+        pl.BlockSpec((window,), lambda t, w: (w[t],)),
+        pl.BlockSpec((window,), lambda t, w: (w[t] + 1,)),
+    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(T,),
-        in_specs=[
-            pl.BlockSpec((1, S), lambda t, w: (t, 0)),
-            pl.BlockSpec((1, S), lambda t, w: (t, 0)),
-            pl.BlockSpec((1, S), lambda t, w: (t, 0)),
-            pl.BlockSpec((window,), lambda t, w: (w[t],)),
-            pl.BlockSpec((window,), lambda t, w: (w[t] + 1,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((rows_per_tile,), lambda t, w: (t,)),
     )
 
@@ -181,7 +208,7 @@ def spmv_csrk_tiles_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((T * rows_per_tile,), x_padded.dtype),
         interpret=interpret,
-    )(win_block, vals, local_col, local_row, x_padded, x_padded)
+    )(win_block, *operands, x_padded, x_padded)
 
 
 def _spmm_csrk_tiles_pallas_batched(
@@ -190,6 +217,7 @@ def _spmm_csrk_tiles_pallas_batched(
     local_row: jax.Array,  # [T, S]
     win_block: jax.Array,  # [T]
     x_padded: jax.Array,   # [(nblocks+1) * window, B]
+    val_scale: jax.Array | None = None,
     *,
     rows_per_tile: int,
     window: int,
@@ -204,16 +232,24 @@ def _spmm_csrk_tiles_pallas_batched(
 
     from jax.experimental.pallas import tpu as pltpu
 
+    in_specs = [
+        pl.BlockSpec((1, S), lambda t, w: (t, 0)),
+        pl.BlockSpec((1, S), lambda t, w: (t, 0)),
+        pl.BlockSpec((1, S), lambda t, w: (t, 0)),
+    ]
+    operands = [vals, local_col, local_row]
+    if val_scale is not None:
+        G = val_scale.shape[1]
+        in_specs.append(pl.BlockSpec((1, G), lambda t, w: (t, 0)))
+        operands.append(val_scale)
+    in_specs += [
+        pl.BlockSpec((window, B), lambda t, w: (w[t], 0)),
+        pl.BlockSpec((window, B), lambda t, w: (w[t] + 1, 0)),
+    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(T,),
-        in_specs=[
-            pl.BlockSpec((1, S), lambda t, w: (t, 0)),
-            pl.BlockSpec((1, S), lambda t, w: (t, 0)),
-            pl.BlockSpec((1, S), lambda t, w: (t, 0)),
-            pl.BlockSpec((window, B), lambda t, w: (w[t], 0)),
-            pl.BlockSpec((window, B), lambda t, w: (w[t] + 1, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((rows_per_tile, B), lambda t, w: (t, 0)),
     )
 
@@ -228,4 +264,4 @@ def _spmm_csrk_tiles_pallas_batched(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((T * rows_per_tile, B), x_padded.dtype),
         interpret=interpret,
-    )(win_block, vals, local_col, local_row, x_padded, x_padded)
+    )(win_block, *operands, x_padded, x_padded)

@@ -38,16 +38,31 @@ def _gather_onehot_2d(x: jax.Array, idx: jax.Array, chunk: int) -> jax.Array:
     return gather_onehot(x, idx.reshape(-1), chunk).reshape(idx.shape + x.shape[1:])
 
 
+def _dequant_chunk(vals: jax.Array, scale_ref) -> jax.Array:
+    """Load a [C, W] value block as f32, applying int8 lane-group scales.
+
+    ``scale_ref`` (``[1, C, W/group]`` f32 or None) holds one symmetric scale
+    per group of lanes (see ``repro.sparse.csrk.INT8_GROUP``); bf16/f32
+    streams pass ``None`` and only upcast.  Accumulation stays f32 always.
+    """
+    v = vals.astype(jnp.float32)
+    if scale_ref is not None:
+        s = scale_ref[0]                                           # [C, W/G]
+        group = v.shape[1] // s.shape[1]
+        v = v * jnp.repeat(s, group, axis=1, total_repeat_length=v.shape[1])
+    return v
+
+
 def _kernel(
     vals_ref,   # [1, C, W]
     col_ref,    # [1, C, W]
-    x_ref,      # [n_pad]
-    y_ref,      # [C]
-    *,
+    *rest,      # ([scale_ref,] x_ref [n_pad], y_ref [C])
     gather_chunk: int,
     gather_mode: str,
 ):
-    vals = vals_ref[0]                                             # [C, W]
+    scale_ref = rest[0] if len(rest) == 3 else None
+    x_ref, y_ref = rest[-2:]
+    vals = _dequant_chunk(vals_ref[0], scale_ref)                  # [C, W]
     cols = col_ref[0]                                              # [C, W]
     x = x_ref[...]                                                 # [n_pad]
     if gather_mode == "take":
@@ -55,22 +70,22 @@ def _kernel(
         gathered = gathered.astype(jnp.float32)
     else:
         gathered = _gather_onehot_2d(x, cols, gather_chunk)
-    contrib = vals.astype(jnp.float32) * gathered                  # [C, W]
+    contrib = vals * gathered                                      # [C, W]
     y_ref[...] = jnp.sum(contrib, axis=1).astype(y_ref.dtype)      # [C]
 
 
 def _kernel_batched(
     vals_ref,   # [1, C, W]
     col_ref,    # [1, C, W]
-    x_ref,      # [n_pad, B]
-    y_ref,      # [C, B]
-    *,
+    *rest,      # ([scale_ref,] x_ref [n_pad, B], y_ref [C, B])
     gather_chunk: int,
     gather_mode: str,
 ):
     """SpMM variant: x carries a trailing batch dimension; the chunk's
     vals/cols stream (the bandwidth-bound side) is read once for all B."""
-    vals = vals_ref[0]                                             # [C, W]
+    scale_ref = rest[0] if len(rest) == 3 else None
+    x_ref, y_ref = rest[-2:]
+    vals = _dequant_chunk(vals_ref[0], scale_ref)                  # [C, W]
     cols = col_ref[0]                                              # [C, W]
     x = x_ref[...]                                                 # [n_pad, B]
     if gather_mode == "take":
@@ -78,7 +93,7 @@ def _kernel_batched(
         gathered = gathered.reshape(cols.shape + (x.shape[1],)).astype(jnp.float32)
     else:
         gathered = _gather_onehot_2d(x, cols, gather_chunk)        # [C, W, B]
-    contrib = vals.astype(jnp.float32)[..., None] * gathered       # [C, W, B]
+    contrib = vals[..., None] * gathered                           # [C, W, B]
     y_ref[...] = jnp.sum(contrib, axis=1).astype(y_ref.dtype)      # [C, B]
 
 
@@ -89,6 +104,7 @@ def spmv_sellcs_pallas(
     vals: jax.Array,     # [T, C, W]
     col_idx: jax.Array,  # [T, C, W]
     x_padded: jax.Array, # [n_pad] or [n_pad, B] — padded to a 128 multiple by ops.py
+    val_scale: jax.Array | None = None,  # [T, C, W/group] f32, int8 values only
     *,
     gather_chunk: int = 512,
     gather_mode: str = "onehot",
@@ -98,7 +114,9 @@ def spmv_sellcs_pallas(
 
     Args:
       vals / col_idx: [T, C, W] uniform-width chunk arrays (padding slots
-        carry val 0 / col 0 and are inert).
+        carry val 0 / col 0 and are inert).  ``vals`` may be f32, bf16, or
+        int8; int8 requires ``val_scale`` (per-lane-group f32 scales,
+        dequantized in-kernel with f32 accumulation).
       x_padded: [n_pad] vector or [n_pad, B] block, padded to a 128 multiple
         by ops.py (or by the distributed layer's per-shard reconstruction).
 
@@ -114,6 +132,15 @@ def spmv_sellcs_pallas(
     """
     T, C, W = vals.shape
     n_pad = x_padded.shape[0]
+    in_specs = [
+        pl.BlockSpec((1, C, W), lambda t: (t, 0, 0)),
+        pl.BlockSpec((1, C, W), lambda t: (t, 0, 0)),
+    ]
+    operands = [vals, col_idx]
+    if val_scale is not None:
+        G = val_scale.shape[2]
+        in_specs.append(pl.BlockSpec((1, C, G), lambda t: (t, 0, 0)))
+        operands.append(val_scale)
     if x_padded.ndim == 2:
         B = x_padded.shape[1]
         kernel = functools.partial(
@@ -122,27 +149,19 @@ def spmv_sellcs_pallas(
         return pl.pallas_call(
             kernel,
             grid=(T,),
-            in_specs=[
-                pl.BlockSpec((1, C, W), lambda t: (t, 0, 0)),
-                pl.BlockSpec((1, C, W), lambda t: (t, 0, 0)),
-                pl.BlockSpec((n_pad, B), lambda t: (0, 0)),
-            ],
+            in_specs=in_specs + [pl.BlockSpec((n_pad, B), lambda t: (0, 0))],
             out_specs=pl.BlockSpec((C, B), lambda t: (t, 0)),
             out_shape=jax.ShapeDtypeStruct((T * C, B), x_padded.dtype),
             interpret=interpret,
-        )(vals, col_idx, x_padded)
+        )(*operands, x_padded)
     kernel = functools.partial(
         _kernel, gather_chunk=gather_chunk, gather_mode=gather_mode
     )
     return pl.pallas_call(
         kernel,
         grid=(T,),
-        in_specs=[
-            pl.BlockSpec((1, C, W), lambda t: (t, 0, 0)),
-            pl.BlockSpec((1, C, W), lambda t: (t, 0, 0)),
-            pl.BlockSpec((n_pad,), lambda t: (0,)),
-        ],
+        in_specs=in_specs + [pl.BlockSpec((n_pad,), lambda t: (0,))],
         out_specs=pl.BlockSpec((C,), lambda t: (t,)),
         out_shape=jax.ShapeDtypeStruct((T * C,), x_padded.dtype),
         interpret=interpret,
-    )(vals, col_idx, x_padded)
+    )(*operands, x_padded)

@@ -14,7 +14,9 @@ from repro.sparse.coo import COOMatrix  # noqa: F401
 from repro.sparse.csr import CSRMatrix, csr_from_coo  # noqa: F401
 from repro.sparse.csrk import (  # noqa: F401
     CSRkMatrix,
+    CSRkTileBuckets,
     CSRkTiles,
+    bucket_tiles,
     build_csrk,
     tiles_from_csrk,
 )

@@ -27,6 +27,14 @@ Array = Any
 
 _INT = jnp.int32
 
+#: Bytes per stored value, by tile-view value dtype.  Mirrors the accounting
+#: in ``repro.core.tuner.tile_bytes_model`` (value + 4B col + 4B row indices).
+VALUE_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+
+#: Slots per int8 scale group (= the TPU lane count; slot counts are always
+#: padded to multiples of 128, so groups tile the slot axis exactly).
+INT8_GROUP = 128
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -168,9 +176,19 @@ class CSRkTiles:
     tile's rows. Padding slots carry ``vals == 0`` and index 0 so they are
     numerically inert. Entries outside the window are diverted to a COO
     remainder (empty after Band-k on all suites).
+
+    ``value_dtype`` selects how ``vals`` is stored: ``"f32"`` (as built),
+    ``"bf16"`` (half the value bytes, exact codes for the suite's small-int
+    stencil weights), or ``"int8"`` with per-group symmetric scales in
+    ``val_scale`` (one f32 scale per :data:`INT8_GROUP` slots — the GPTQ-style
+    grouped-scale idiom from :mod:`repro.optim.compress`).  Kernels and
+    oracles dequantize on load and accumulate in f32 either way; the COO
+    remainder always stays f32.  ``tile_nnz`` records each tile's real
+    (in-window) entry count so :func:`bucket_tiles` can compact slots without
+    mistaking explicitly-stored zeros for padding.
     """
 
-    vals: Array        # [T, slots]
+    vals: Array        # [T, slots] f32 | bf16 | int8 (see value_dtype)
     local_col: Array   # [T, slots] int32, in [0, 2*window)
     local_row: Array   # [T, slots] int32, in [0, rows_per_tile)
     win_block: Array   # [T] int32, x-window block index (elements = blk*window)
@@ -181,17 +199,23 @@ class CSRkTiles:
     shape: Tuple[int, int]
     rows_per_tile: int
     window: int
+    val_scale: Any = None      # [T, slots/INT8_GROUP] f32, int8 path only
+    tile_nnz: Any = None       # [T] int32 real in-window entries per tile
+    value_dtype: str = "f32"
 
     def tree_flatten(self):
         return (
             (self.vals, self.local_col, self.local_row, self.win_block,
-             self.rem_row, self.rem_col, self.rem_val),
-            (self.shape, self.rows_per_tile, self.window),
+             self.rem_row, self.rem_col, self.rem_val, self.val_scale,
+             self.tile_nnz),
+            (self.shape, self.rows_per_tile, self.window, self.value_dtype),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, shape=aux[0], rows_per_tile=aux[1], window=aux[2])
+        return cls(*children[:7], shape=aux[0], rows_per_tile=aux[1],
+                   window=aux[2], val_scale=children[7], tile_nnz=children[8],
+                   value_dtype=aux[3])
 
     @property
     def num_tiles(self) -> int:
@@ -210,17 +234,55 @@ class CSRkTiles:
         real = float(np.count_nonzero(np.asarray(self.vals))) + self.remainder_nnz
         return (self.num_tiles * self.slots + self.remainder_nnz - real) / max(real, 1.0)
 
+    def modeled_bytes(self) -> int:
+        """Modeled per-SpMV HBM traffic of the monolithic kernel launch.
+
+        Same accounting as ``repro.core.tuner.tile_bytes_model``: every tile
+        moves ``slots`` value/col/row slots plus the 2-block x-window and its
+        y rows; the int8 path adds one f32 scale per :data:`INT8_GROUP` slots.
+        """
+        vb = VALUE_BYTES[self.value_dtype]
+        per_tile = self.slots * (vb + 8) + 2 * self.window * 4 + self.rows_per_tile * 4
+        if self.val_scale is not None:
+            per_tile += (self.slots // INT8_GROUP) * 4
+        return self.num_tiles * per_tile + self.remainder_nnz * 12
+
 
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
-def tiles_from_csrk(mat: CSRkMatrix, window: int | None = None) -> CSRkTiles:
+def _pack_values(tvals: np.ndarray, value_dtype: str):
+    """Convert the freshly built f32 tile values to ``value_dtype``.
+
+    Returns ``(vals_device, val_scale_device_or_None)``.  bf16 is a plain
+    cast; int8 uses the grouped-scale idiom from :mod:`repro.optim.compress`
+    (one f32 scale per :data:`INT8_GROUP` slots along the slot axis).
+    """
+    if value_dtype == "f32":
+        return jnp.asarray(tvals), None
+    if value_dtype == "bf16":
+        return jnp.asarray(tvals).astype(jnp.bfloat16), None
+    if value_dtype == "int8":
+        from repro.optim.compress import quantize_int8_grouped
+
+        q, scales = quantize_int8_grouped(tvals, group=INT8_GROUP)
+        return jnp.asarray(q), jnp.asarray(scales)
+    raise ValueError(
+        f"unknown value_dtype {value_dtype!r} (expected f32|bf16|int8)"
+    )
+
+
+def tiles_from_csrk(
+    mat: CSRkMatrix, window: int | None = None, value_dtype: str = "f32"
+) -> CSRkTiles:
     """Materialise the padded per-SSR tile view (host-side setup, numpy).
 
     ``window`` is the x-window *block* width in columns (rounded up to 128).
     If None it is chosen as the max SSR column span rounded up — i.e. Band-k
     decides it (DESIGN §2: banding makes the window contiguous and small).
+    ``value_dtype`` ∈ {"f32", "bf16", "int8"} compresses the value stream
+    (see :class:`CSRkTiles`); indices and the COO remainder stay as-is.
     """
     rp = np.asarray(mat.row_ptr)
     ci = np.asarray(mat.col_idx)
@@ -264,6 +326,7 @@ def tiles_from_csrk(mat: CSRkMatrix, window: int | None = None) -> CSRkTiles:
     tlc = np.zeros((T, slots), np.int32)
     tlr = np.zeros((T, slots), np.int32)
     twin = np.zeros((T,), np.int32)
+    tnnz = np.zeros((T,), np.int32)
     rem_r, rem_c, rem_v = [], [], []
 
     for t in range(T):
@@ -282,6 +345,7 @@ def tiles_from_csrk(mat: CSRkMatrix, window: int | None = None) -> CSRkTiles:
         tvals[t, :k] = vals[inw]
         tlc[t, :k] = cols[inw] - start
         tlr[t, :k] = rows[inw] - r0
+        tnnz[t] = k
         if k < len(cols):
             out = ~inw
             rem_r.append(rows[out])
@@ -297,8 +361,9 @@ def tiles_from_csrk(mat: CSRkMatrix, window: int | None = None) -> CSRkTiles:
         rem_c = np.zeros((0,), np.int32)
         rem_v = np.zeros((0,), vl.dtype)
 
+    dvals, dscale = _pack_values(tvals, value_dtype)
     return CSRkTiles(
-        jnp.asarray(tvals),
+        dvals,
         jnp.asarray(tlc),
         jnp.asarray(tlr),
         jnp.asarray(twin, _INT),
@@ -308,4 +373,145 @@ def tiles_from_csrk(mat: CSRkMatrix, window: int | None = None) -> CSRkTiles:
         (m, n),
         rows_per_tile,
         window,
+        val_scale=dscale,
+        tile_nnz=jnp.asarray(tnnz, _INT),
+        value_dtype=value_dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+# slot-bucketed tile view (SELL-C-σ-style per-bucket compaction for CSR-k)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSRkTileBuckets:
+    """Slot-compacted CSR-k tile view: tiles grouped by rounded-up nnz count.
+
+    The monolithic :class:`CSRkTiles` pads every tile to the single worst
+    tile's slot count, so the kernel's HBM traffic scales with ``T · max_t
+    nnz_t`` instead of ``Σ_t nnz_t``.  Bucketing applies the SELL-C-σ trick
+    (Kreutzer et al., arXiv:1307.6209) at tile granularity: tiles whose nnz
+    rounds up to the same 128-multiple (the same rounding
+    ``repro.core.tuner.tile_bytes_model`` prices, so the tuner and this
+    builder agree on bytes) share one bucket, stored as its own ``[T_b, S_b]``
+    array set and launched as its own Pallas grid.
+
+    Each bucket is a self-consistent :class:`CSRkTiles` over its *own
+    compacted row space* (bucket tile ``i`` owns local rows ``[i·R, (i+1)·R)``
+    and ``shape[0] == T_b · R``); ``tile_ids[b][i]`` maps bucket tile ``i``
+    back to its global tile, so callers scatter bucket outputs into global
+    rows ``tile_ids[b][i] · R``.  Because compaction only drops trailing
+    all-padding slots, every real slot keeps its position and the per-bucket
+    launches are bit-for-bit identical to the monolithic kernel (pinned by
+    tests/test_tile_buckets.py).  The COO remainder is held once, here.
+    """
+
+    buckets: Tuple[CSRkTiles, ...]
+    tile_ids: Tuple[Array, ...]   # per bucket: [T_b] int32 global tile ids
+    rem_row: Array                # [R] int32
+    rem_col: Array                # [R] int32
+    rem_val: Array                # [R]
+    shape: Tuple[int, int]
+    rows_per_tile: int
+    window: int
+    num_tiles: int
+    value_dtype: str = "f32"
+
+    def tree_flatten(self):
+        return (
+            (self.buckets, self.tile_ids, self.rem_row, self.rem_col,
+             self.rem_val),
+            (self.shape, self.rows_per_tile, self.window, self.num_tiles,
+             self.value_dtype),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shape=aux[0], rows_per_tile=aux[1],
+                   window=aux[2], num_tiles=aux[3], value_dtype=aux[4])
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def remainder_nnz(self) -> int:
+        return int(self.rem_val.shape[0])
+
+    def bucket_slots(self) -> Tuple[int, ...]:
+        return tuple(b.slots for b in self.buckets)
+
+    def padding_overhead(self) -> float:
+        """Padded-slot fraction across all buckets (cf. CSRkTiles)."""
+        real = self.remainder_nnz
+        total = self.remainder_nnz
+        for b in self.buckets:
+            real += int(np.count_nonzero(np.asarray(b.vals)))
+            total += b.num_tiles * b.slots
+        return (total - real) / max(float(real), 1.0)
+
+    def modeled_bytes(self) -> int:
+        """Modeled per-SpMV HBM traffic, summed over the per-bucket launches.
+
+        ``Σ_b T_b · (S_b·(value+8) + 2·window·4 + rows·4)`` — same per-tile
+        accounting as :meth:`CSRkTiles.modeled_bytes`, but each tile is priced
+        at its bucket's compacted slot count instead of the global worst.
+        """
+        return sum(b.modeled_bytes() for b in self.buckets) + self.remainder_nnz * 12
+
+
+def bucket_tiles(tiles: CSRkTiles) -> CSRkTileBuckets:
+    """Regroup a monolithic tile view into slot buckets (host-side, numpy).
+
+    Tiles are keyed by ``round_up(max(tile_nnz, 1), 128)`` and each bucket's
+    arrays are the original rows sliced to the bucket's slot count — real
+    entries are packed at the front of every tile, so slicing drops only
+    trailing padding and the kernel output is unchanged bit-for-bit.
+    """
+    v = np.asarray(tiles.vals)
+    lc = np.asarray(tiles.local_col)
+    lr = np.asarray(tiles.local_row)
+    wb = np.asarray(tiles.win_block)
+    sc = None if tiles.val_scale is None else np.asarray(tiles.val_scale)
+    if tiles.tile_nnz is not None:
+        nnz_t = np.asarray(tiles.tile_nnz)
+    else:  # hand-built views: padding is 0-valued, real zeros are not packed
+        nnz_t = (v != 0).sum(axis=1)
+    slots_t = np.minimum(((np.maximum(nnz_t, 1) + 127) // 128) * 128, tiles.slots)
+
+    buckets, ids = [], []
+    for S_b in sorted(set(int(s) for s in slots_t)):
+        sel = np.flatnonzero(slots_t == S_b)
+        scale_b = None
+        if sc is not None:
+            scale_b = jnp.asarray(sc[sel, : S_b // INT8_GROUP])
+        buckets.append(CSRkTiles(
+            jnp.asarray(v[sel, :S_b]),
+            jnp.asarray(lc[sel, :S_b]),
+            jnp.asarray(lr[sel, :S_b]),
+            jnp.asarray(wb[sel], _INT),
+            jnp.zeros((0,), _INT),
+            jnp.zeros((0,), _INT),
+            jnp.zeros((0,), np.asarray(tiles.rem_val).dtype),
+            (len(sel) * tiles.rows_per_tile, tiles.shape[1]),
+            tiles.rows_per_tile,
+            tiles.window,
+            val_scale=scale_b,
+            tile_nnz=jnp.asarray(nnz_t[sel], _INT),
+            value_dtype=tiles.value_dtype,
+        ))
+        ids.append(jnp.asarray(sel, _INT))
+    return CSRkTileBuckets(
+        tuple(buckets),
+        tuple(ids),
+        tiles.rem_row,
+        tiles.rem_col,
+        tiles.rem_val,
+        tiles.shape,
+        tiles.rows_per_tile,
+        tiles.window,
+        tiles.num_tiles,
+        value_dtype=tiles.value_dtype,
     )

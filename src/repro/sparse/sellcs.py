@@ -139,18 +139,24 @@ class SELLCSTiles:
     The canonical flat container remains the storage-accounting truth.
     """
 
-    vals: Array      # [T, C, W] float
+    vals: Array      # [T, C, W] f32 | bf16 | int8 (see value_dtype)
     col_idx: Array   # [T, C, W] int32 (padding → 0)
     row_perm: Array  # [m_pad] int32 — sorted position → original row (pad → m)
     shape: Tuple[int, int]
     C: int
+    val_scale: Any = None      # [T, C, W/group] f32, int8 path only
+    value_dtype: str = "f32"
 
     def tree_flatten(self):
-        return (self.vals, self.col_idx, self.row_perm), (self.shape, self.C)
+        return (
+            (self.vals, self.col_idx, self.row_perm, self.val_scale),
+            (self.shape, self.C, self.value_dtype),
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, shape=aux[0], C=aux[1])
+        return cls(*children[:3], shape=aux[0], C=aux[1],
+                   val_scale=children[3], value_dtype=aux[2])
 
     @property
     def num_chunks(self) -> int:
@@ -163,6 +169,21 @@ class SELLCSTiles:
     def padding_overhead(self) -> float:
         real = float(np.count_nonzero(np.asarray(self.vals)))
         return (self.vals.size - real) / max(real, 1.0)
+
+    def modeled_bytes(self) -> int:
+        """Modeled per-SpMV HBM traffic of the Pallas launch.
+
+        Each chunk moves ``C·W`` value + col slots, reads ``C·W`` gathered x
+        elements (4B — the one-hot gather touches the x block once per lane in
+        the model) and writes ``C`` y rows; int8 adds the per-group scales.
+        """
+        from repro.sparse.csrk import VALUE_BYTES, INT8_GROUP
+
+        vb = VALUE_BYTES[self.value_dtype]
+        per_chunk = self.C * self.width * (vb + 8) + self.C * 4
+        if self.val_scale is not None:
+            per_chunk += self.C * (self.width // INT8_GROUP) * 4
+        return self.num_chunks * per_chunk
 
 
 def sellcs_from_csr(
@@ -238,8 +259,15 @@ def sellcs_from_csr(
     )
 
 
-def tiles_from_sellcs(mat: SELLCSMatrix, lane: int = 128) -> SELLCSTiles:
-    """Materialise the uniform-width Pallas view (host-side setup, numpy)."""
+def tiles_from_sellcs(
+    mat: SELLCSMatrix, lane: int = 128, value_dtype: str = "f32"
+) -> SELLCSTiles:
+    """Materialise the uniform-width Pallas view (host-side setup, numpy).
+
+    ``value_dtype`` ∈ {"f32", "bf16", "int8"} compresses the value stream the
+    same way :func:`repro.sparse.csrk.tiles_from_csrk` does — int8 groups run
+    along the lane (W) axis, one f32 scale per ``INT8_GROUP`` lanes.
+    """
     T, C = mat.num_chunks, mat.C
     widths = mat.chunk_widths()
     W = _round_up(int(widths.max(initial=1)), lane)
@@ -256,10 +284,15 @@ def tiles_from_sellcs(mat: SELLCSMatrix, lane: int = 128) -> SELLCSTiles:
         # flat layout is column-major → [w, C] then transpose to [C, w]
         pvals[t, :, :w] = fv[base : base + w * C].reshape(w, C).T
         pcols[t, :, :w] = fc[base : base + w * C].reshape(w, C).T
+    from repro.sparse.csrk import _pack_values
+
+    dvals, dscale = _pack_values(pvals, value_dtype)
     return SELLCSTiles(
-        jnp.asarray(pvals),
+        dvals,
         jnp.asarray(pcols),
         mat.row_perm,
         mat.shape,
         C=C,
+        val_scale=dscale,
+        value_dtype=value_dtype,
     )

@@ -39,10 +39,9 @@ def test_csrk_kernel_dtypes(rng, dtype):
     A, dense, x = _case(rng, 64, 64, 0.1, np.float32)
     k3 = build_csrk(A, srs=8, ssrs=2, k=3)
     tiles = tiles_from_csrk(k3)
-    tiles_d = tiles.tree_unflatten(
-        (tiles.shape, tiles.rows_per_tile, tiles.window),
-        (tiles.vals.astype(dtype), tiles.local_col, tiles.local_row,
-         tiles.win_block, tiles.rem_row, tiles.rem_col, tiles.rem_val.astype(dtype)),
+    import dataclasses
+    tiles_d = dataclasses.replace(
+        tiles, vals=tiles.vals.astype(dtype), rem_val=tiles.rem_val.astype(dtype)
     )
     y = ops.spmv_csrk(tiles_d, jnp.asarray(x).astype(dtype), interpret=True)
     tol = 1e-4 if dtype == np.float32 else 5e-2
