@@ -9,7 +9,8 @@ Compares every metric the two files share, by unit:
   than ``tolerance`` (relative) slower AND more than ``--min-us`` slower in
   absolute terms — the absolute floor keeps sub-100 µs interpret-mode noise
   from tripping the gate;
-* ``gflop/s``: regression when throughput drops by more than ``tolerance``;
+* ``gflop/s`` / ``req/s`` (kernel and served throughput): regression when
+  the rate drops by more than ``tolerance``;
 * ``roofline_frac`` fractions (the measured-roofline section's achieved /
   ceiling ratio): regression when the fraction drops by more than
   ``tolerance`` — both sides are normalised by the *same-run* stream
@@ -72,7 +73,7 @@ def compare(new_records, base_records, *, tolerance: float, min_us: float):
                     "baseline": base_v, "new": new_v,
                     "ratio": new_us / max(base_us, 1e-12),
                 })
-        elif unit == "gflop/s":
+        elif unit in ("gflop/s", "req/s"):
             if new_v < base_v * (1 - tolerance):
                 regressions.append({
                     "section": key[0], "name": key[1], "unit": unit,

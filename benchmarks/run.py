@@ -24,13 +24,17 @@ def _unit(key: str) -> str:
     """Infer the measurement unit from a row field name."""
     if key.endswith("_us"):
         return "us"
+    if key.endswith("_ms"):
+        return "ms"
     if "gflops" in key:
         return "gflop/s"
     if key.endswith("_pct") or "relperf" in key:
         return "percent"  # before the overhead check: *_overhead_pct is ×100
     if "overhead" in key or key.endswith("_frac"):
         return "fraction"
-    if key == "speedup":
+    if key.endswith("_rps"):
+        return "req/s"
+    if "speedup" in key:
         return "ratio"
     if key in ("n", "nnz", "B", "iters", "devices", "halo"):
         return "count"
@@ -81,7 +85,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="smaller matrices")
     ap.add_argument("--only", default=None,
                     help="comma list: formats,spmm,banding,overhead,"
-                         "constant_tuning,scaling,tuning_model,roofline")
+                         "constant_tuning,scaling,tuning_model,roofline,serve")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write per-section rows as JSON records "
                          '({"section", "name", "value", "unit"})')
@@ -127,6 +131,10 @@ def main() -> None:
         from benchmarks import roofline
         records += _flatten("roofline", roofline.run(scale=scale,
                                                      quick=args.quick))
+    if section("serve"):
+        print("\n## serve (engine throughput: coalesced vs one-at-a-time)")
+        from benchmarks import serve
+        records += _flatten("serve", serve.run(scale=576, quick=args.quick))
     if args.json:
         from repro.obs import get_registry, write_records
 

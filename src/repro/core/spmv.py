@@ -53,6 +53,9 @@ class PreparedSpMV:
     ``backend`` records which registered format won the dispatch ("csrk" or
     "sellcs"); ``stats`` holds the one-pass summary that drove the decision
     (None when the format was forced and stats were not needed).
+    ``fingerprint`` is the content hash of the *source* matrix
+    (:meth:`~repro.sparse.CSRMatrix.fingerprint`) stamped at ``prepare``
+    time — the identity the serving layer's operator cache keys on.
 
     ``perm`` maps new index → old index (A was symmetrically permuted), so for
     callers living in the original index space:
@@ -74,6 +77,8 @@ class PreparedSpMV:
     stats: Optional[MatrixStats] = None
     tile_buckets: Optional[CSRkTileBuckets] = None
     value_dtype: str = "f32"
+    fingerprint: Optional[str] = None
+    spmm_width: Optional[int] = None
 
     def __post_init__(self):
         # Device-resident permutation arrays, built once at prepare() time so
@@ -101,7 +106,35 @@ class PreparedSpMV:
           matrix exactly once for all B columns (SpMV is bandwidth-bound, so
           the extra right-hand sides are nearly free — the SELL-C-σ/CG
           amortization argument).
+
+        With ``spmm_width=W`` set, every kernel launch is padded to exactly
+        W columns (inputs wider than W are split into W-column launches):
+        the launch shape is then a constant of the operator, so each output
+        column's bits depend only on its own input column — the invariant
+        that lets the serving engine coalesce requests into shared batches
+        without changing any result (XLA picks contraction schedules per
+        *shape*, so un-padded calls with different B may legitimately differ
+        in final-ulp bits).  Unset (the default), calls dispatch at their
+        natural width: fastest, and bit-stable per width.
         """
+        if self.spmm_width is not None:
+            W = self.spmm_width
+            if x.ndim == 1:
+                xw = jnp.zeros((x.shape[0], W), x.dtype).at[:, 0].set(x)
+                return self._dispatch(xw)[:, 0]
+            B = x.shape[1]
+            outs = []
+            for off in range(0, B, W):
+                blk = x[:, off:off + W]
+                if blk.shape[1] < W:
+                    blk = jnp.pad(blk, ((0, 0), (0, W - blk.shape[1])))
+                outs.append(self._dispatch(blk))
+            Y = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+            return Y[:, :B]
+        return self._dispatch(x)
+
+    def _dispatch(self, x: jax.Array) -> jax.Array:
+        """Backend kernel launch at x's natural width (no fixed-width pad)."""
         chunk = self.params.gather_chunk
         if self.backend == "sellcs":
             return kops.spmv_sellcs(
@@ -172,6 +205,22 @@ class PreparedSpMV:
             return self.tiles.modeled_bytes()
         m, n = self.csrk.shape
         return self.csrk.nnz * 8 + (m + 1) * 4 + m * 4 + n * 4
+
+    def resident_bytes(self) -> int:
+        """Total bytes this operator keeps resident between calls.
+
+        Sums the array leaves of every container the operator holds (canonical
+        CSR-k/SELL arrays, the kernel tile views, the cached permutation
+        arrays) — an upper bound on the footprint one cached operator costs,
+        which is what the serving layer's byte-budget LRU
+        (:class:`repro.serve.OperatorCache`) charges against.
+        """
+        leaves = jax.tree_util.tree_leaves((
+            self.csrk, self.tiles, self.tile_buckets, self.sell,
+            self.sell_tiles, self._perm_dev, self._inv_perm_dev,
+        ))
+        return sum(int(leaf.nbytes) for leaf in leaves
+                   if hasattr(leaf, "nbytes"))
 
 
 def _record_prepared(op: PreparedSpMV) -> PreparedSpMV:
@@ -271,6 +320,7 @@ def prepare(
     sell_sigma: int | None = None,
     value_dtype: str = "f32",         # "f32" | "bf16" | "int8" | "auto"
     tile_layout: str = "bucketed",    # "bucketed" | "monolithic"
+    spmm_width: int | None = None,
     mesh=None,
     shard_axis: str = "data",
     x_strategy: str = "auto",
@@ -321,6 +371,13 @@ def prepare(
         bit-for-bit identical to monolithic for f32, strictly fewer HBM
         bytes whenever tile nnz varies) or "monolithic" (single launch,
         every tile padded to the worst tile's slots).
+      spmm_width: when set to W ≥ 1, pad every kernel launch to exactly W
+        columns (and split wider inputs into W-column launches).  Fixes the
+        launch shape so each output column is bit-independent of its batch
+        neighbours — required by the serving engine's coalescing contract
+        (``repro.serve``); costs one W-wide launch even for single vectors.
+        None (default) dispatches at natural width.  Single-device operators
+        only (the ``mesh=`` path ignores it).
       mesh: optional :class:`jax.sharding.Mesh`.  When given, the prepared
         operator is partitioned over ``shard_axis`` and returned as a
         :class:`~repro.core.distributed.ShardedPreparedSpMV` — same call
@@ -357,7 +414,12 @@ def prepare(
         raise ValueError(
             f"unknown tile_layout {tile_layout!r} (expected bucketed|monolithic)"
         )
+    if spmm_width is not None and spmm_width < 1:
+        raise ValueError(f"spmm_width must be >= 1, got {spmm_width}")
     reg = get_registry()
+    # Content hash of the *input* matrix (pre-reordering): the identity the
+    # serving layer's operator cache keys on.  O(nnz) host-side, setup only.
+    fingerprint = A.fingerprint()
     stats = None
     if format == "auto":
         with reg.timer("prepare", "phase.stats"):
@@ -389,6 +451,8 @@ def prepare(
             sell_tiles=sell_tiles,
             stats=stats,
             value_dtype=value_dtype,
+            fingerprint=fingerprint,
+            spmm_width=spmm_width,
         ))
     if format != "csrk":
         raise ValueError(f"unknown format {format!r} (expected auto|csrk|sellcs)")
@@ -441,6 +505,8 @@ def prepare(
         stats=stats,
         tile_buckets=buckets,
         value_dtype=value_dtype,
+        fingerprint=fingerprint,
+        spmm_width=spmm_width,
     ))
 
 

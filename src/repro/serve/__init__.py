@@ -1,0 +1,37 @@
+"""repro.serve — the SpMV serving engine (continuous batching + operator cache).
+
+Public surface:
+
+* :class:`ServeEngine` — step-driven request engine: ``add_matrix`` /
+  ``submit`` / ``step`` / ``drain``.
+* :class:`CoalescingScheduler`, :class:`Request`, :class:`Batch` — the
+  deterministic batching decisions (injectable clock, no threads).
+* :class:`OperatorCache` — fingerprint-keyed byte-budget LRU of
+  :class:`~repro.core.spmv.PreparedSpMV` operators.
+* :class:`ServeStats`, :func:`percentile` — bounded serving statistics.
+* :class:`SpMVFuture` — the per-request result slot.
+
+See docs/serving.md for the end-to-end story and runnable examples.
+"""
+from repro.serve.cache import OperatorCache
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import (
+    Batch,
+    CoalescingScheduler,
+    Request,
+    SpMVFuture,
+)
+from repro.serve.stats import RESERVOIR_CAP, ServeStats, emit_interval, percentile
+
+__all__ = [
+    "Batch",
+    "CoalescingScheduler",
+    "OperatorCache",
+    "Request",
+    "RESERVOIR_CAP",
+    "ServeEngine",
+    "ServeStats",
+    "SpMVFuture",
+    "emit_interval",
+    "percentile",
+]

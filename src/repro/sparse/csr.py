@@ -3,6 +3,7 @@ format in the registry converts from (the paper's heterogeneity pivot)."""
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Tuple
 
 import jax
@@ -57,6 +58,26 @@ class CSRMatrix:
 
     def row_lengths(self) -> Array:
         return self.row_ptr[1:] - self.row_ptr[:-1]
+
+    def fingerprint(self) -> str:
+        """Content hash of the matrix: shape + dtype + the three CSR streams.
+
+        Two CSRMatrix instances with identical numerical content (same
+        sparsity pattern, same values, same value dtype) hash identically
+        regardless of which arrays they were built from — this is the cache
+        key the serving layer (:mod:`repro.serve`) uses to share one
+        ``PreparedSpMV`` across matrix ids that alias the same content.
+        Host-side and O(nnz); called once per matrix at registration, never
+        on the request path.
+        """
+        h = hashlib.blake2b(digest_size=16)
+        vals = np.asarray(self.vals)
+        h.update(np.asarray([self.shape[0], self.shape[1]], np.int64).tobytes())
+        h.update(str(vals.dtype).encode())
+        h.update(np.ascontiguousarray(np.asarray(self.row_ptr)).tobytes())
+        h.update(np.ascontiguousarray(np.asarray(self.col_idx)).tobytes())
+        h.update(np.ascontiguousarray(vals).tobytes())
+        return h.hexdigest()
 
     def todense(self) -> Array:
         rows = jnp.repeat(

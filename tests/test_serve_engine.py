@@ -1,0 +1,238 @@
+"""Property/fuzz tests for the serving engine — the engine's co-headline.
+
+The contract under test: **every request's result is bit-for-bit identical
+to a direct ``prepare(A)(x)`` call with that request's own payload**, no
+matter how requests are interleaved across matrices, how the scheduler cuts
+batch boundaries, which backend (csrk / sellcs) the matrix routes to, or
+which value dtype (f32 / bf16) the operator stores.  The direct reference
+operators share the engine's ``spmm_width`` (fixed-width launches are what
+make coalescing bit-transparent — see ``PreparedSpMV.__call__``).
+Randomized interleavings are drawn through the hypothesis shim (falls back
+to tests/_hypothesis_fallback.py when hypothesis isn't installed).
+
+Also here: engine telemetry record shapes (serve.queue_depth series,
+serve.cache_* counters, dispatch/latency aggregates) and the telemetry-off
+path staying a bit-for-bit no-op, extending what PR 4 pinned for the rest of
+the stack.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+try:  # hypothesis is a dev-only dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except Exception:  # pragma: no cover - CI installs hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.spmv_suite import grid_laplacian_2d
+from repro.core.spmv import prepare
+from repro.obs import MetricsRegistry, using_registry
+from repro.serve import ServeEngine
+
+PREPARE_OPTS = dict(device="tpu_v5e", format="auto", interpret=True,
+                    spmm_width=8)
+
+
+def _irregular(m, n, seed):
+    """Skewed row lengths so format="auto" routes to SELL-C-σ."""
+    r = np.random.default_rng(seed)
+    dense = np.zeros((m, n), np.float32)
+    for i in range(m):
+        L = 1 + (i * 7) % 13 + (12 if i % 11 == 0 else 0)
+        cols = r.choice(n, size=min(L, n), replace=False)
+        dense[i, cols] = r.standard_normal(len(cols)).astype(np.float32)
+    from repro.sparse import CSRMatrix
+
+    return CSRMatrix.fromdense(dense)
+
+
+@functools.lru_cache(maxsize=None)
+def _matrices():
+    """2 regular (csrk route) + 2 irregular (sellcs route) test matrices."""
+    A = grid_laplacian_2d(6, 6)
+    B_reg = type(A)(A.row_ptr, A.col_idx, A.vals * 0.5 + 1.0, A.shape)
+    return {
+        "reg1": A,
+        "reg2": B_reg,
+        "irr1": _irregular(40, 40, 0),
+        "irr2": _irregular(48, 48, 7),
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _direct_ops(value_dtype):
+    """Freshly prepared reference operators — what the engine must match."""
+    return {
+        mid: prepare(A, value_dtype=value_dtype, **PREPARE_OPTS)
+        for mid, A in _matrices().items()
+    }
+
+
+def _engine(value_dtype, max_batch, **kw):
+    eng = ServeEngine(
+        max_batch=max_batch, value_dtype=value_dtype,
+        log_interval=None, **{**PREPARE_OPTS, **kw},
+    )
+    for mid, A in _matrices().items():
+        eng.add_matrix(mid, A)
+    return eng
+
+
+def test_route_preconditions():
+    """The fixture matrices really do exercise both registry routes."""
+    ops = _direct_ops("f32")
+    assert ops["reg1"].backend == "csrk" and ops["reg2"].backend == "csrk"
+    assert ops["irr1"].backend == "sellcs" and ops["irr2"].backend == "sellcs"
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10**6), max_batch=st.integers(1, 5),
+       vd=st.integers(0, 1))
+def test_random_interleavings_bit_identical(seed, max_batch, vd):
+    """Arbitrary submit/step interleavings: engine == direct, bit-for-bit."""
+    value_dtype = ("f32", "bf16")[vd]
+    rng = np.random.default_rng(seed)
+    direct = _direct_ops(value_dtype)
+    eng = _engine(value_dtype, max_batch)
+    mids = list(_matrices())
+    pending = []
+    for _ in range(14):
+        mid = mids[rng.integers(len(mids))]
+        n = _matrices()[mid].n
+        width = [1, 1, 1, 2, 3][rng.integers(5)]
+        xdtype = jnp.bfloat16 if rng.random() < 0.2 else jnp.float32
+        shape = (n,) if width == 1 else (n, width)
+        x = jnp.asarray(rng.standard_normal(shape), xdtype)
+        pending.append((mid, x, eng.submit(mid, x)))
+        if rng.random() < 0.4:  # interleave dispatches with arrivals
+            eng.step()
+    eng.drain()
+    assert eng.queue_depth == 0
+    for mid, x, fut in pending:
+        got = np.asarray(fut.result())
+        want = np.asarray(direct[mid](x))
+        assert got.dtype == want.dtype and got.shape == want.shape
+        np.testing.assert_array_equal(
+            got.view(np.uint8), want.view(np.uint8),
+            err_msg=f"{mid} {value_dtype} x{tuple(x.shape)} mb={max_batch}",
+        )
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10**6), max_batch=st.integers(2, 8))
+def test_burst_same_matrix_coalesced_still_bit_identical(seed, max_batch):
+    """A same-matrix burst exercises every batch-boundary cut ≤ max_batch."""
+    rng = np.random.default_rng(seed)
+    direct = _direct_ops("f32")
+    eng = _engine("f32", max_batch)
+    n = _matrices()["irr1"].n
+    futs = []
+    for _ in range(max_batch + 3):
+        x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        futs.append((x, eng.submit("irr1", x)))
+    eng.drain()
+    # the burst really was coalesced (not served one by one)
+    assert eng.stats.batches_dispatched < len(futs)
+    for x, fut in futs:
+        np.testing.assert_array_equal(
+            np.asarray(fut.result()), np.asarray(direct["irr1"](x))
+        )
+
+
+def test_prepare_amortized_across_requests(rng):
+    """N requests on 4 matrices → exactly 4 prepares, N−4 cache hits."""
+    eng = _engine("f32", 4)
+    N = 0
+    for _ in range(3):
+        for mid, A in _matrices().items():
+            eng.submit(mid, jnp.asarray(rng.standard_normal(A.n), jnp.float32))
+            N += 1
+    eng.drain()
+    assert eng.stats.requests_completed == N
+    assert eng.cache.prepares == len(_matrices())
+    assert eng.cache.hits + eng.cache.misses == eng.stats.batches_dispatched
+    assert eng.cache.misses == len(_matrices())
+
+
+def test_aliased_matrix_ids_share_one_operator(rng):
+    """Two ids with identical content → one prepare (fingerprint keying)."""
+    A = _matrices()["reg1"]
+    # max_batch=1 forces two dispatches → the second id must hit the cache
+    # (with a larger budget the two ids coalesce into one batch, since
+    # aliased content shares a queue key too)
+    eng = ServeEngine(max_batch=1, log_interval=None, **PREPARE_OPTS)
+    eng.add_matrix("left", A)
+    eng.add_matrix("right", type(A)(A.row_ptr, A.col_idx, A.vals, A.shape))
+    x = jnp.asarray(rng.standard_normal(A.n), jnp.float32)
+    f1, f2 = eng.submit("left", x), eng.submit("right", x)
+    eng.drain()
+    assert eng.cache.prepares == 1 and eng.cache.hits >= 1
+    np.testing.assert_array_equal(np.asarray(f1.result()),
+                                  np.asarray(f2.result()))
+
+
+# -- telemetry ---------------------------------------------------------------
+
+def _run_small_stream(eng, rng):
+    outs = []
+    for i in range(6):
+        mid = ("reg1", "irr1")[i % 2]
+        n = _matrices()[mid].n
+        x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        outs.append(eng.submit(mid, x))
+        eng.step()
+    eng.drain()
+    return [np.asarray(f.result()) for f in outs]
+
+
+def test_serve_registry_record_shapes():
+    rng = np.random.default_rng(0)
+    with using_registry(MetricsRegistry()) as reg:
+        eng = ServeEngine(max_batch=4, log_interval=0.0, **PREPARE_OPTS)
+        for mid, A in _matrices().items():
+            eng.add_matrix(mid, A)
+        _run_small_stream(eng, rng)
+        recs = reg.records()
+    serve = {r["name"]: r for r in recs if r["section"] == "serve"}
+    # queue-depth series points (one per logging interval)
+    assert "queue_depth.0" in serve and serve["queue_depth.0"]["unit"] == "count"
+    # cache counters
+    assert serve["cache_miss"]["value"] == 2.0       # reg1 + irr1
+    assert serve["cache_hit"]["value"] >= 1.0
+    assert serve["cache_bytes"]["value"] > 0
+    # dispatch + prepare timer aggregates (total ms + call count)
+    assert serve["dispatch_ms"]["unit"] == "ms"
+    assert serve["dispatch_calls"]["value"] == serve["batches"]["value"]
+    assert serve["prepare_calls"]["value"] == 2.0
+    # per-request latency series + percentile gauges + amortization
+    assert "latency_ms.0" in serve and serve["latency_ms.0"]["unit"] == "ms"
+    assert "latency_p50_ms" in serve and "latency_p99_ms" in serve
+    assert serve["requests"]["value"] == 6.0
+    assert serve["prepare_amortization"]["value"] == 3.0  # 6 requests / 2
+    assert serve["cache_hit_rate"]["unit"] == "fraction"
+    assert serve["throughput_rps"]["unit"] == "req/s"
+
+
+def test_serve_telemetry_off_is_bit_identical_no_op():
+    """Registry off: zero records, identical bits out (PR 4's invariant)."""
+    runs = []
+    for enabled in (True, False):
+        rng = np.random.default_rng(123)
+        with using_registry(MetricsRegistry(enabled=enabled)) as reg:
+            eng = ServeEngine(max_batch=3, log_interval=0.0, **PREPARE_OPTS)
+            for mid, A in _matrices().items():
+                eng.add_matrix(mid, A)
+            outs = _run_small_stream(eng, rng)
+            runs.append(outs)
+            if not enabled:
+                assert reg.records() == []
+    for y_on, y_off in zip(*runs):
+        np.testing.assert_array_equal(y_on, y_off)
+
+
+def test_drain_empty_engine_is_noop():
+    eng = ServeEngine(log_interval=None, **PREPARE_OPTS)
+    assert eng.drain() == 0 and eng.step() == 0

@@ -151,3 +151,36 @@ def test_block_power_iteration_top_eigs(rng):
     lams = np.asarray(block_power_iteration(lambda M: spmm(A, M), A.m, 3, iters=300))
     true = np.sort(np.linalg.eigvalsh(dense))[::-1][:3]
     np.testing.assert_allclose(lams, true, rtol=5e-2)
+
+
+@pytest.mark.parametrize("backend", ["csrk", "sellcs"])
+def test_spmm_width_fixes_columnwise_bits_at_scale(rng, backend):
+    """With ``spmm_width=W`` every launch has one static shape, so
+    op(X)[:, i] bit-equals op(x_i) regardless of how columns are grouped.
+
+    This is the serving engine's coalescing contract (requests batched into
+    one SpMM must return exactly what a direct call returns).  It must be
+    pinned at n ≈ 2-4k: XLA picks contraction schedules per shape, and at
+    these sizes un-padded launches at different widths really do differ in
+    final-ulp bits (which is why the engine prepares with a fixed width
+    rather than relying on natural-width dispatch).
+    """
+    if backend == "csrk":
+        A = grid_laplacian_2d(64, 64)
+    else:
+        A, _ = _irregular_case(rng, m=1536, n=1536)
+    op = prepare(A, device="tpu_v5e", format=backend, spmm_width=8)
+    xs = [jnp.asarray(rng.standard_normal(A.n), jnp.float32)
+          for _ in range(11)]
+    singles = [np.asarray(op(x)) for x in xs]
+    # 3 and 8 fit one padded launch; 11 splits into two fixed-width launches
+    for B in (3, 8, 11):
+        Y = np.asarray(op(jnp.stack(xs[:B], axis=1)))
+        for i in range(B):
+            np.testing.assert_array_equal(
+                Y[:, i], singles[i], err_msg=f"{backend} col {i} of B={B}"
+            )
+    # a column's bits are independent of its batch neighbours' payloads
+    Y1 = np.asarray(op(jnp.stack([xs[0]] + xs[1:8], axis=1)))
+    Y2 = np.asarray(op(jnp.stack([xs[0]] + xs[3:10], axis=1)))
+    np.testing.assert_array_equal(Y1[:, 0], Y2[:, 0])
