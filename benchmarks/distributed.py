@@ -3,11 +3,17 @@
 Measures the sharded prepared operator (``prepare(A, mesh=...)``) against the
 single-device baseline on a forced multi-device CPU host platform, recording
 wall time and the modeled collective bytes — the O(band) halo vs O(n)
-all-gather argument in numbers.
+all-gather argument in numbers.  For the halo strategy the staged plan is
+measured both ways: ``halo_overlap=True`` (interior tiles run while the
+exchange is in flight) against ``halo_overlap=False`` (blocking), and the
+ratio is reported as ``overlap_efficiency`` (> 1 means overlap won; results
+are bit-for-bit identical either way, so this is purely a schedule A/B).
 
-Standalone by design: the XLA host-device-count flag must be set *before*
-jax initialises, so this script cannot run inside ``benchmarks/run.py``'s
-process.  CI runs it as its own step:
+Standalone by design: the XLA host-device-count and latency-hiding flags
+must be set *before* jax initialises, so this script cannot run inside
+``benchmarks/run.py``'s process; it sources both flag sets from
+``repro.util.platform`` (stdlib-only, import-safe pre-jax).  CI runs it as
+its own step:
 
     PYTHONPATH=src python benchmarks/distributed.py --quick --json dist.json
 
@@ -28,6 +34,9 @@ def run(scale: int = 1024, shards=(1, 2, 4), batches=(1, 8)) -> list:
 
     Returns a list of row dicts (string fields label, numeric fields are the
     measurements) in the shape ``benchmarks/run.py``'s flattener expects.
+    Halo rows carry ``overlapped_us`` / ``blocking_us`` /
+    ``overlap_efficiency``; degenerate strategies report efficiency 1.0 (no
+    schedule to compare).
     """
     import jax
     import jax.numpy as jnp
@@ -50,6 +59,10 @@ def run(scale: int = 1024, shards=(1, 2, 4), batches=(1, 8)) -> list:
     A = grid_laplacian_2d(side, side)
     rng = np.random.default_rng(0)
     base = prepare(A, format="auto")
+    # the sharded operator partitions the *monolithic* tile view; that is the
+    # layout its bit-for-bit contract is against (the default bucketed layout
+    # sums identical values in a different launch grouping)
+    base_exact = prepare(A, format="auto", tile_layout="monolithic")
     devices = jax.devices()
     rows = []
     for D in shards:
@@ -59,6 +72,13 @@ def run(scale: int = 1024, shards=(1, 2, 4), batches=(1, 8)) -> list:
         mesh = Mesh(np.asarray(devices[:D]).reshape(D, 1), ("data", "model"))
         for strategy in ("replicated", "allgather", "halo"):
             op = prepare(A, mesh=mesh, x_strategy=strategy)
+            # schedule A/B for the staged halo plan: same plan geometry,
+            # overlap flipped; anything else compares a plan against itself
+            blocking_op = None
+            if op.x_strategy == "halo" and op.overlap:
+                blocking_op = prepare(
+                    A, mesh=mesh, x_strategy=strategy, halo_overlap=False
+                )
             for B in batches:
                 if B == 1:
                     x = jnp.asarray(rng.standard_normal(A.n), jnp.float32)
@@ -68,15 +88,29 @@ def run(scale: int = 1024, shards=(1, 2, 4), batches=(1, 8)) -> list:
                     )
                 t_sharded = time_fn(op, x)
                 t_single = time_fn(base, x)
-                y_err = float(jnp.abs(op(x) - base(x)).max())
+                y_err = float(jnp.abs(op(x) - base_exact(x)).max())
+                if blocking_op is not None:
+                    t_block = time_fn(blocking_op, x)
+                    y_err = max(
+                        y_err, float(jnp.abs(blocking_op(x) - op(x)).max())
+                    )
+                else:
+                    t_block = t_sharded
                 rows.append({
                     "matrix": f"lap2d_{side}x{side}",
                     "strategy": f"{strategy}->{op.x_strategy}",
                     "backend": op.backend,
+                    # string so the record flattener keys each (D, B) point
+                    # separately (labels are built from string fields only)
+                    "config": f"D{D}.B{B}",
                     "shards": D,
                     "B": B,
                     "sharded_us": t_sharded * 1e6,
                     "single_us": t_single * 1e6,
+                    "overlapped_us": t_sharded * 1e6,
+                    "blocking_us": t_block * 1e6,
+                    "overlap_efficiency": t_block / t_sharded,
+                    "interior_fraction": op.interior_fraction,
                     "halo": op.halo,
                     "collective_bytes": op.collective_bytes_per_call(B=B),
                     "max_abs_err": y_err,
@@ -101,19 +135,27 @@ def main() -> None:
     args = ap.parse_args()
     shards = tuple(int(s) for s in args.shards.split(","))
 
-    # must precede any jax import in this process; append so a pre-existing
-    # XLA_FLAGS (memory/debug flags) cannot silently disable the forcing —
-    # XLA honours the last occurrence of a repeated flag
-    flag = f"--xla_force_host_platform_device_count={max(shards)}"
-    os.environ["XLA_FLAGS"] = f"{os.environ.get('XLA_FLAGS', '')} {flag}".strip()
+    # must precede any jax import in this process; configure_xla appends so a
+    # pre-existing XLA_FLAGS (memory/debug flags) cannot silently disable the
+    # forcing — XLA honours the last occurrence of a repeated flag.  The
+    # latency-hiding set is what lets an async backend actually run the
+    # interior launch under the halo ppermutes (no-ops on the CPU host
+    # platform, but keeps the recipe in one place for real meshes).
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    ))
+    from repro.util.platform import configure_xla
+
+    configure_xla(host_device_count=max(shards), latency_hiding=True)
     rows = run(
         scale=1024 if args.quick else 4096,
         shards=shards,
         batches=tuple(int(b) for b in args.batches.split(",")),
     )
-    header = ["matrix", "strategy", "backend", "shards", "B",
-              "sharded_us", "single_us", "halo", "collective_bytes",
-              "max_abs_err"]
+    header = ["matrix", "strategy", "backend", "config", "shards", "B",
+              "sharded_us", "single_us", "overlapped_us", "blocking_us",
+              "overlap_efficiency", "interior_fraction", "halo",
+              "collective_bytes", "max_abs_err"]
     print(",".join(header))
     for r in rows:
         print(",".join(str(r[h]) for h in header))

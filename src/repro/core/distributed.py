@@ -5,7 +5,8 @@ CSR-k a *cluster* citizen.  Two levels live here:
 
 1. The low-level :class:`ShardedCSR` + ``dist_spmv_*`` functions: a plain
    row-partitioned CSR executed with the pure-jnp oracle inside ``shard_map``
-   (the off-TPU fallback path, and the historical entry point).
+   (the off-TPU fallback path, and the historical entry point).  Both are
+   thin shims over the same plan executor the prepared path uses.
 
 2. The prepared-operator integration: :func:`shard_prepared` wraps a
    single-device :class:`~repro.core.spmv.PreparedSpMV` into a
@@ -13,10 +14,23 @@ CSR-k a *cluster* citizen.  Two levels live here:
    view* across the mesh and runs the actual Pallas CSR-k / SELL-C-σ kernels
    inside ``shard_map``.  ``prepare(A, mesh=...)`` is the public spelling.
 
-Partitioning follows the Band-k argument: the matrix is reordered globally,
-rows (for CSR-k: whole kernel tiles; for SELL-C-σ: whole C-row chunks) are
-partitioned contiguously across the ``data`` axis, so each shard is itself a
-banded sub-operator.  x is then either
+Execution is organised around a :class:`ShardPlan` built once at
+``shard_prepared`` time.  The plan records, per shard, which kernel tiles are
+**interior** (every real column they read lies inside the shard's own x
+slice) and which are **boundary** (they touch a neighbour's rows), plus the
+halo send/recv schedule — only the edges a boundary tile actually needs.
+The executor is phase-structured:
+
+  1. put the halo ``ppermute``\\ s on the wire (no data dependence on any
+     compute, so an async-collectives backend can overlap them),
+  2. run the interior tiles against the local x slice while the exchange is
+     in flight,
+  3. run the boundary tiles against the received halo window and scatter
+     both launches' rows back to their home tiles.
+
+The replicated and all-gather strategies are expressed as *degenerate* plans
+(no tile split, no edges) through the same executor, so all three x
+strategies share one code path.  x is distributed per strategy:
 
   * **replicated** (small n — iterative-solver regime; no collective),
   * **all-gather-x**: row-sharded with a pre-SpMV all-gather that XLA can
@@ -34,8 +48,12 @@ Tile partitioning (not raw row partitioning) is what makes the sharded
 operator *bit-for-bit* identical to the single-device one: every kernel
 instance sees exactly the same tile contents, static block shapes and slot
 ordering as the global launch, so per-row floating-point summation order is
-unchanged.  ``tests/test_sharded_prepare.py`` pins this for both backends,
-[n] and [n, B] inputs, and all three x strategies.
+unchanged.  The interior/boundary split preserves this — each tile still runs
+the unmodified kernel on its unmodified contents, and tile row ranges are
+disjoint, so scattering the two launches back together reproduces the
+monolithic launch exactly.  ``tests/test_sharded_prepare.py`` and
+``tests/test_shard_plan.py`` pin this for both backends, [n] and [n, B]
+inputs, all three x strategies, and overlapped-vs-blocking execution.
 """
 from __future__ import annotations
 
@@ -49,11 +67,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.formats import CSRMatrix
-from repro.kernels import ref as kref
-from repro.kernels.ops import _pad_rows
+from repro.kernels.ops import _pad_rows, combine_tile_rows
 from repro.obs import get_registry
 from repro.sparse.csrk import _round_up
-from repro.sparse.stats import MatrixStats, compute_shard_stats
+from repro.sparse.stats import MatrixStats, classify_tile_reach, compute_shard_stats
 
 _LANE = 128
 
@@ -135,28 +152,153 @@ def _local_spmv(row_ptr, col_idx, vals, x_full, col_offset=0):
     return jax.ops.segment_sum(contrib, rows, num_segments=rows_per_shard)
 
 
+# ---------------------------------------------------------------------------
+# the staged execution plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Static schedule for one sharded SpMV operator, built at prepare time.
+
+    The plan separates *what was decided* from *how it executes*: the
+    resolved x strategy, the tile partition geometry, the interior/boundary
+    tile split and the halo edge schedule all live here, and one executor
+    (:func:`_build_plan_call` / :func:`_csr_plan_shard_map`) interprets them.
+    Replicated and all-gather strategies are degenerate plans — no tile
+    split, no edges — so all three strategies flow through the same code.
+
+    Attributes:
+      strategy: resolved x distribution ("replicated" | "allgather" | "halo").
+      num_shards / rows_per_shard: partition geometry (tile-granular rows).
+      halo: exchanged rows per neighbour edge (0 unless strategy is "halo").
+      tiles_per_shard / rows_per_tile: kernel tile geometry (0 for the CSR
+        oracle fallback, which has no tile view).
+      overlap: when True the executor runs phase-structured — halo permutes
+        first, interior tiles while the exchange is in flight, boundary tiles
+        against the received window.  False means one monolithic launch after
+        x distribution (the "blocking" schedule).
+      interior_ids / boundary_ids: per-shard int32 arrays of *local* tile ids
+        (populated whenever the tile reach was classified, i.e. tile backends
+        under the halo strategy, independent of ``overlap``).
+      interior_fraction: fraction of non-empty tiles that are interior — the
+        O(1) signal for whether overlapping the exchange can pay.
+      left_edges / right_edges: ``(src, dst)`` ppermute pairs delivering each
+        receiver's left resp. right halo.  Need-based for tile backends: an
+        edge exists only if the receiver has a boundary tile reaching that
+        side, so shards with purely interior reach exchange nothing.
+    """
+
+    strategy: str
+    num_shards: int
+    rows_per_shard: int
+    halo: int = 0
+    tiles_per_shard: int = 0
+    rows_per_tile: int = 0
+    overlap: bool = False
+    interior_fraction: float = 1.0
+    interior_ids: Tuple = ()
+    boundary_ids: Tuple = ()
+    left_edges: Tuple[Tuple[int, int], ...] = ()
+    right_edges: Tuple[Tuple[int, int], ...] = ()
+
+    @property
+    def is_degenerate(self) -> bool:
+        """True when no halo schedule exists (replicated / allgather plans)."""
+        return self.strategy != "halo"
+
+    @property
+    def num_interior(self) -> int:
+        """Max interior tiles on any shard (the interior launch width)."""
+        return max((len(i) for i in self.interior_ids), default=0)
+
+    @property
+    def num_boundary(self) -> int:
+        """Max boundary tiles on any shard (the boundary launch width)."""
+        return max((len(b) for b in self.boundary_ids), default=0)
+
+    def collective_bytes(self, B: int = 1, itemsize: int = 4) -> int:
+        """Modeled bytes moved by the x collective per SpMV/SpMM call.
+
+        halo: ``halo`` rows per *scheduled edge* — since edges are need-based,
+        only sides that boundary tiles actually read are counted (an interior-
+        only shard contributes nothing).  allgather: every shard receives the
+        other D−1 shards' rows.  replicated: 0 (x is already everywhere).
+        """
+        per_row = itemsize * max(B, 1)
+        if self.strategy == "halo":
+            n_edges = len(self.left_edges) + len(self.right_edges)
+            return self.halo * n_edges * per_row
+        if self.strategy == "allgather":
+            D, R = self.num_shards, self.rows_per_shard
+            return (D - 1) * R * D * per_row
+        return 0
+
+
+def _ring_edges(D: int):
+    """Full bidirectional ring schedule (legacy ``dist_spmv_halo`` semantics).
+
+    ``left``: every shard sends its tail to the right neighbour (each
+    receiver gets its left halo); ``right``: mirrored.  Includes the
+    wraparound pair — harmless because wraparound columns are never real.
+    """
+    left = tuple((i, (i + 1) % D) for i in range(D))
+    right = tuple((i, (i - 1) % D) for i in range(D))
+    return left, right
+
+
+def _csr_plan_shard_map(plan: ShardPlan, mesh: Mesh, axis: str):
+    """shard_map executor for a plan over raw CSR shards (oracle path).
+
+    Shared by the legacy ``dist_spmv_*`` entry points and the prepared
+    operator's CSR-2/CPU fallback, so the ``_local_spmv`` wiring exists
+    exactly once.  Returns ``f(row_ptr, col_idx, vals, x_padded)`` operating
+    on :class:`ShardedCSR`-layout stacks.
+    """
+    D, Rs, H = plan.num_shards, plan.rows_per_shard, plan.halo
+    strategy = plan.strategy
+    left_edges = [tuple(e) for e in plan.left_edges]
+    right_edges = [tuple(e) for e in plan.right_edges]
+
+    def body(rp, ci, vl, xs):
+        if strategy == "halo":
+            d = jax.lax.axis_index(axis)
+            left = (
+                jax.lax.ppermute(xs[-H:], axis, left_edges)
+                if left_edges else jnp.zeros_like(xs[-H:])
+            )
+            right = (
+                jax.lax.ppermute(xs[:H], axis, right_edges)
+                if right_edges else jnp.zeros_like(xs[:H])
+            )
+            x_win = jnp.concatenate([left, xs, right])  # rows [d·Rs−H, d·Rs+Rs+H)
+            return _local_spmv(rp[0], ci[0], vl[0], x_win, col_offset=d * Rs - H)
+        if strategy == "allgather":
+            x_full = jax.lax.all_gather(xs, axis, tiled=True)
+        else:
+            x_full = xs
+        return _local_spmv(rp[0], ci[0], vl[0], x_full)
+
+    x_spec = P() if strategy == "replicated" else P(axis)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), x_spec),
+        out_specs=P(axis), check_rep=False,
+    )
+
+
 def dist_spmv_allgather(A: ShardedCSR, x: jax.Array, mesh: Mesh, axis: str = "data"):
     """y = A x with x row-sharded; all-gather x then local SpMV (baseline).
 
     ``x`` may be [n] or [n, B]; the collective moves the whole padded x
-    (O(n·B) bytes) regardless of the band structure.
+    (O(n·B) bytes) regardless of the band structure.  Thin shim over the
+    degenerate all-gather :class:`ShardPlan`.
     """
-    D = mesh.shape[axis]
+    D = int(mesh.shape[axis])
+    plan = ShardPlan("allgather", D, A.rows_per_shard)
+    f = _csr_plan_shard_map(plan, mesh, axis)
     xpad = _pad_rows(x, A.rows_per_shard * D)
-
-    def body(rp, ci, vl, x_shard):
-        x_full = jax.lax.all_gather(x_shard, axis, tiled=True)
-        return _local_spmv(rp[0], ci[0], vl[0], x_full)
-
-    f = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis)),
-        out_specs=P(axis),
-        check_rep=False,
-    )
-    y = f(A.row_ptr, A.col_idx, A.vals, xpad)
-    return y[: A.shape[0]]
+    return f(A.row_ptr, A.col_idx, A.vals, xpad)[: A.shape[0]]
 
 
 def dist_spmv_halo(A: ShardedCSR, x: jax.Array, mesh: Mesh, axis: str = "data"):
@@ -164,36 +306,21 @@ def dist_spmv_halo(A: ShardedCSR, x: jax.Array, mesh: Mesh, axis: str = "data"):
 
     Valid when ``A.halo <= A.rows_per_shard`` (guaranteed by Band-k for the
     suites we run; checked at trace time).  ``x`` may be [n] or [n, B].
+    Thin shim over a full-ring halo :class:`ShardPlan` — the ring schedule
+    (rather than the prepared path's need-based edges) preserves the
+    historical semantics exactly.
     """
-    D = mesh.shape[axis]
+    D = int(mesh.shape[axis])
     R = A.rows_per_shard
     H = _round_up(max(A.halo, 1), _LANE)
     if H > R:
         # band too wide for single-neighbour halo — fall back
         return dist_spmv_allgather(A, x, mesh, axis)
+    left, right = _ring_edges(D)
+    plan = ShardPlan("halo", D, R, halo=H, left_edges=left, right_edges=right)
+    f = _csr_plan_shard_map(plan, mesh, axis)
     xpad = _pad_rows(x, R * D)
-
-    def body(rp, ci, vl, x_shard):
-        idx = jax.lax.axis_index(axis)
-        left = jax.lax.ppermute(
-            x_shard[-H:], axis, [(i, (i + 1) % D) for i in range(D)]
-        )
-        right = jax.lax.ppermute(
-            x_shard[:H], axis, [(i, (i - 1) % D) for i in range(D)]
-        )
-        x_win = jnp.concatenate([left, x_shard, right])  # columns [r0-H, r0+R+H)
-        col_offset = idx * R - H
-        return _local_spmv(rp[0], ci[0], vl[0], x_win, col_offset=col_offset)
-
-    f = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis)),
-        out_specs=P(axis),
-        check_rep=False,
-    )
-    y = f(A.row_ptr, A.col_idx, A.vals, xpad)
-    return y[: A.shape[0]]
+    return f(A.row_ptr, A.col_idx, A.vals, xpad)[: A.shape[0]]
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +332,11 @@ X_STRATEGIES = ("replicated", "allgather", "halo")
 #: Below this n, replicating x everywhere is cheaper than any collective
 #: bookkeeping (the iterative-solver regime the paper motivates with).
 REPLICATE_N_MAX = 1 << 14
+
+#: Minimum fraction of non-empty tiles that must be interior for the staged
+#: overlap schedule to be worth its second kernel launch; below this the
+#: exchange dominates anyway and the plan stays blocking.
+OVERLAP_MIN_INTERIOR = 0.25
 
 
 def select_x_strategy(
@@ -243,6 +375,24 @@ def select_x_strategy(
     return "allgather"
 
 
+def estimate_interior_fraction(
+    stats: MatrixStats, num_shards: int, rows_per_shard: int
+) -> float:
+    """O(1) estimate of the interior tile fraction from the bandwidth alone.
+
+    After Band-k, only tiles within one bandwidth of a shard edge can be
+    boundary, so at most ``2·round_up(bw, 128)`` of each shard's rows are
+    boundary rows.  This is the prediction the measured
+    ``ShardPlan.interior_fraction`` can be checked against without building
+    any tile view — same O(1)-from-stats discipline as
+    :func:`select_x_strategy`.
+    """
+    if num_shards <= 1:
+        return 1.0
+    bw = _round_up(max(int(stats.bandwidth), 1), _LANE)
+    return max(0.0, 1.0 - 2.0 * bw / max(rows_per_shard, 1))
+
+
 def _stack_shards(a: np.ndarray, D: int, per: int) -> jax.Array:
     """Stack a leading-dim array into [D, per, ...] with zero padding."""
     a = np.asarray(a)
@@ -251,22 +401,86 @@ def _stack_shards(a: np.ndarray, D: int, per: int) -> jax.Array:
     return jnp.asarray(out.reshape((D, per) + a.shape[1:]))
 
 
-def _required_halo(
-    real_cols_per_shard: list, rows_per_shard: int, num_shards: int
-) -> int:
+def _stack_tile_subset(a, ids, D: int, Tp: int, T_sub: int) -> jax.Array:
+    """Gather per-shard tile subsets of a global tile array into [D, T_sub, ...].
+
+    ``ids`` holds each shard's *local* tile ids (shard d's tile t lives at
+    global index ``d·Tp + t``).  Shards with fewer than ``T_sub`` subset
+    tiles are padded with all-zero tiles, which the kernels treat as inert
+    (val == 0) and whose rows go to the combine dump slot.
+    """
+    a = np.asarray(a)
+    out = np.zeros((D, T_sub) + a.shape[1:], a.dtype)
+    for d, loc in enumerate(ids):
+        loc = np.asarray(loc, np.int64)
+        if len(loc):
+            out[d, : len(loc)] = a[d * Tp + loc]
+    return jnp.asarray(out)
+
+
+def _stack_subset_ids(ids, D: int, Tp: int, T_sub: int) -> jax.Array:
+    """Stack local tile-id arrays into [D, T_sub]; pad slots dump to ``Tp``."""
+    out = np.full((D, T_sub), Tp, np.int32)
+    for d, loc in enumerate(ids):
+        if len(loc):
+            out[d, : len(loc)] = np.asarray(loc, np.int32)
+    return jnp.asarray(out)
+
+
+def _required_halo(reach, rows_per_shard: int, num_shards: int) -> int:
     """Max column overhang of any shard's *real* (val ≠ 0) entries, in rows.
 
-    Padding slots multiply by 0 and are inert, so only real columns constrain
-    the halo window — this is what lets the halo stay O(band) even though the
-    kernels' BlockSpec windows are 128-aligned.
+    ``reach`` is a per-shard list of ``(lo, hi)`` real-column extents (or
+    None for empty shards).  Padding slots multiply by 0 and are inert, so
+    only real columns constrain the halo window — this is what lets the halo
+    stay O(band) even though the kernels' BlockSpec windows are 128-aligned.
     """
     H = 0
-    for d, cols in enumerate(real_cols_per_shard):
-        if cols is None or len(cols) == 0:
+    for d, r in enumerate(reach):
+        if r is None:
             continue
+        lo, hi = r
         r0, r1 = d * rows_per_shard, (d + 1) * rows_per_shard
-        H = max(H, r0 - int(cols.min()), int(cols.max()) + 1 - r1)
+        H = max(H, r0 - lo, hi + 1 - r1)
     return max(H, 0)
+
+
+def _halo_edges(reach, rows_per_shard: int, num_shards: int):
+    """Need-based halo schedule: one edge per side a shard actually reads.
+
+    Shard d gets a ``(d−1, d)`` left edge only if some real column of its
+    tiles lies below ``d·rows_per_shard`` (mirrored on the right).  After
+    Band-k most shards need both neighbours, but block-diagonal matrices —
+    or partitions where a shard's band happens to align with its slice —
+    drop edges, and with them the exchanged bytes.
+    """
+    left, right = [], []
+    for d, r in enumerate(reach):
+        if r is None:
+            continue
+        lo, hi = r
+        if lo < d * rows_per_shard and d > 0:
+            left.append((d - 1, d))
+        if hi >= (d + 1) * rows_per_shard and d + 1 < num_shards:
+            right.append((d + 1, d))
+    return tuple(left), tuple(right)
+
+
+def _shard_reach(lo, hi, tiles_per_shard: int, num_shards: int):
+    """Per-shard ``(lo, hi)`` real-column extents from per-tile reach."""
+    lo = np.asarray(lo)
+    hi = np.asarray(hi)
+    T = int(lo.shape[0])
+    out = []
+    for d in range(num_shards):
+        t0, t1 = d * tiles_per_shard, min((d + 1) * tiles_per_shard, T)
+        sl, sh = lo[t0:t1], hi[t0:t1]
+        real = sh >= sl
+        if real.any():
+            out.append((int(sl[real].min()), int(sh[real].max())))
+        else:
+            out.append(None)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -286,39 +500,30 @@ class ShardedPreparedSpMV:
       base: the single-device :class:`~repro.core.spmv.PreparedSpMV` the
         shard view was derived from (source of truth for perm/params/stats).
       mesh / axis: the mesh and the axis name rows are partitioned over.
-      num_shards: mesh axis size D.
-      x_strategy: the *resolved* x distribution ("replicated" | "allgather" |
-        "halo"); ``x_strategy_requested`` records what the caller asked for
-        (halo demotes to allgather when the actual column reach of a shard
-        exceeds one neighbour's rows).
-      rows_per_shard: padded kernel-space rows per shard (tile granular).
-      halo: exchanged rows per neighbour (0 unless strategy is "halo").
+      x_strategy_requested: what the caller asked for; the *resolved*
+        strategy lives on ``plan.strategy`` (halo demotes to allgather when
+        the actual column reach of a shard exceeds one neighbour's rows).
+      plan: the :class:`ShardPlan` — partition geometry, interior/boundary
+        tile split, halo edge schedule and the overlap decision.
       shard_stats / shard_backends: per-shard one-pass statistics and the
         registry's per-shard format decisions — recorded for introspection
         and benchmarks; execution uses the uniform ``backend`` so the SPMD
         body (and the bit-for-bit contract with ``base``) stays single-program.
+      shard_arrays: the stacked per-shard kernel arrays (backend- and
+        overlap-layout-dependent; keys documented in
+        :func:`_build_plan_call`).
+      c_csr: raw CSR shards for the oracle fallback (no tile view).
     """
 
     base: "object"                    # PreparedSpMV (kept untyped: no cycle)
     mesh: Mesh
     axis: str
-    num_shards: int
-    x_strategy: str
     x_strategy_requested: str
-    rows_per_shard: int
-    halo: int
+    plan: ShardPlan
     shard_stats: Tuple[Optional[MatrixStats], ...]
     shard_backends: Tuple[str, ...]
-    # stacked per-shard kernel arrays (backend-dependent)
-    t_vals: Optional[jax.Array] = None    # csrk: [D, Tp, S]
-    t_lcol: Optional[jax.Array] = None    # csrk: [D, Tp, S]
-    t_lrow: Optional[jax.Array] = None    # csrk: [D, Tp, S]
-    t_win: Optional[jax.Array] = None     # csrk: [D, Tp]
-    t_scale: Optional[jax.Array] = None   # csrk int8: [D, Tp, S/group]
-    s_vals: Optional[jax.Array] = None    # sellcs: [D, Tp, C, W]
-    s_cols: Optional[jax.Array] = None    # sellcs: [D, Tp, C, W]
-    s_scale: Optional[jax.Array] = None   # sellcs int8: [D, Tp, C, W/group]
-    c_csr: Optional[ShardedCSR] = None    # csr2 fallback (oracle path)
+    shard_arrays: dict = dataclasses.field(default_factory=dict)
+    c_csr: Optional[ShardedCSR] = None
 
     def __post_init__(self):
         object.__setattr__(self, "_call_cache", {})
@@ -342,28 +547,48 @@ class ShardedPreparedSpMV:
     def params(self):
         return self.base.params
 
+    @property
+    def num_shards(self) -> int:
+        return self.plan.num_shards
+
+    @property
+    def x_strategy(self) -> str:
+        """The resolved x distribution ("replicated" | "allgather" | "halo")."""
+        return self.plan.strategy
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.plan.rows_per_shard
+
+    @property
+    def halo(self) -> int:
+        return self.plan.halo
+
+    @property
+    def overlap(self) -> bool:
+        """True when execution is staged (interior tiles overlap the halo)."""
+        return self.plan.overlap
+
+    @property
+    def interior_fraction(self) -> float:
+        return self.plan.interior_fraction
+
     def collective_bytes_per_call(self, B: int = 1, itemsize: int = 4) -> int:
         """Modeled bytes moved by the x collective per SpMV/SpMM call.
 
-        halo: 2·H rows to each neighbour per shard; allgather: every shard
-        receives the other D−1 shards' rows; replicated: 0 (x is already
-        everywhere).  This is the quantity ``benchmarks/distributed.py``
+        Delegates to :meth:`ShardPlan.collective_bytes`: halo counts only the
+        need-based edges the plan actually schedules, allgather counts the
+        full O(n) gather.  This is the quantity ``benchmarks/distributed.py``
         records — the O(band) vs O(n) argument in numbers.
         """
-        D, R = self.num_shards, self.rows_per_shard
-        per_row = itemsize * max(B, 1)
-        if self.x_strategy == "halo":
-            return 2 * self.halo * D * per_row
-        if self.x_strategy == "allgather":
-            return (D - 1) * R * D * per_row
-        return 0
+        return self.plan.collective_bytes(B, itemsize)
 
     # -- execution -----------------------------------------------------------
     def __call__(self, x: jax.Array) -> jax.Array:
         """Sharded SpMV / SpMM in the reordered index space ([n] or [n, B])."""
         fn = self._call_cache.get("call")
         if fn is None:
-            fn = _build_sharded_call(self)
+            fn = _build_plan_call(self)
             self._call_cache["call"] = fn
         return fn(x)
 
@@ -379,50 +604,80 @@ class ShardedPreparedSpMV:
         return y_new[self.base._inv_perm_dev]
 
 
-def _build_sharded_call(op: ShardedPreparedSpMV):
+def _build_plan_call(op: ShardedPreparedSpMV):
     """Build the jitted shard_map executor for one ShardedPreparedSpMV.
 
-    Everything static (strategy, halo size, tile shapes, mesh) is closed
-    over; the stacked arrays and x are passed as arguments so jit does not
-    bake them in as constants.  The returned callable accepts x of shape
-    [n] or [n, B].
-    """
-    mesh, axis, D = op.mesh, op.axis, op.num_shards
-    strategy, H, Rs = op.x_strategy, op.halo, op.rows_per_shard
-    base = op.base
-    m = base.csrk.shape[0] if base.backend == "csrk" else base.sell.shape[0]
+    The :class:`ShardPlan` drives everything static (strategy, halo edges,
+    the interior/boundary split, tile shapes); the stacked arrays and x are
+    passed as arguments so jit does not bake them in as constants.  The
+    returned callable accepts x of shape [n] or [n, B].
 
-    def distribute_x(xs, target_len):
-        """Inside-body reconstruction of the (padded) full x from the local
-        shard, per strategy; returns an array of ``target_len`` rows whose
-        values match the single-device padded x at every *real* column."""
-        if strategy == "replicated":
-            return xs
-        trail = xs.shape[1:]
-        if strategy == "allgather":
-            xfull = jax.lax.all_gather(xs, axis, tiled=True)        # [D*Rs,...]
-            ext = jnp.zeros((max(target_len, D * Rs),) + trail, xs.dtype)
-            ext = jax.lax.dynamic_update_slice(
-                ext, xfull, (0,) * ext.ndim
-            )
-            return ext[:target_len]
-        # halo: swap H rows with each neighbour, paste the window into a
-        # zero vector at its absolute offset.  Columns outside the window
-        # are only ever touched by val==0 padding slots (inert by the
-        # _required_halo construction), so zeros there preserve bit-equality.
+    ``shard_arrays`` layouts (all stacked [D, ...]):
+      csrk blocking: ``vals/lcol/lrow/win`` (+ ``scale``);
+      csrk overlap: ``i_*``/``b_*`` subset stacks + ``i_ids``/``b_ids``;
+      sellcs blocking: ``vals/cols`` (+ ``scale``);
+      sellcs overlap: ``i_vals/i_cols/i_ids`` and ``b_*`` counterparts.
+    """
+    mesh, axis, base, plan = op.mesh, op.axis, op.base, op.plan
+    D, Rs, H = plan.num_shards, plan.rows_per_shard, plan.halo
+    strategy = plan.strategy
+    left_edges = [tuple(e) for e in plan.left_edges]
+    right_edges = [tuple(e) for e in plan.right_edges]
+    arrs = op.shard_arrays
+
+    if base.backend == "csrk":
+        m = base.csrk.shape[0]
+    elif base.backend == "sellcs":
+        m = base.sell.shape[0]
+    else:
+        m = op.c_csr.shape[0]
+
+    def halo_parts(xs):
+        """Phase 1: put both halo permutes on the wire.
+
+        Issued before any compute that consumes them, with no data
+        dependence on the interior launch — an async-collectives backend is
+        free to overlap the exchange with phase 2.  Shards outside an edge
+        list receive zeros; only val==0 padding slots ever read those rows.
+        """
+        left = (
+            jax.lax.ppermute(xs[-H:], axis, left_edges)
+            if left_edges else jnp.zeros_like(xs[-H:])
+        )
+        right = (
+            jax.lax.ppermute(xs[:H], axis, right_edges)
+            if right_edges else jnp.zeros_like(xs[:H])
+        )
+        return left, right
+
+    def paste(xwin, lead, target_len):
+        """Paste this shard's x window into a zero buffer of ``target_len``.
+
+        ``xwin`` starts at absolute row ``d·Rs − lead``; the buffer is built
+        ``lead`` rows long on the left so the update offset stays
+        non-negative for shard 0 (dynamic_update_slice clamps, it does not
+        shift).  Columns outside the window are only ever touched by val==0
+        padding slots, so zeros there preserve bit-equality.
+        """
         d = jax.lax.axis_index(axis)
-        left = jax.lax.ppermute(
-            xs[-H:], axis, [(i, (i + 1) % D) for i in range(D)]
-        )
-        right = jax.lax.ppermute(
-            xs[:H], axis, [(i, (i - 1) % D) for i in range(D)]
-        )
-        xwin = jnp.concatenate([left, xs, right])   # rows [d·Rs−H, d·Rs+Rs+H)
-        ext_len = H + max(target_len, D * Rs + H)
-        ext = jnp.zeros((ext_len,) + trail, xs.dtype)
+        trail = xwin.shape[1:]
+        ext_len = lead + max(target_len, D * Rs + lead)
+        ext = jnp.zeros((ext_len,) + trail, xwin.dtype)
         start = (d * Rs,) + (0,) * len(trail)
         ext = jax.lax.dynamic_update_slice(ext, xwin, start)
-        return ext[H : H + target_len]
+        return ext[lead : lead + target_len]
+
+    def distribute_x(xs, target_len):
+        """Blocking x reconstruction (degenerate plans + non-overlap halo)."""
+        if strategy == "replicated":
+            return xs
+        if strategy == "allgather":
+            xfull = jax.lax.all_gather(xs, axis, tiled=True)        # [D*Rs,...]
+            ext = jnp.zeros((max(target_len, D * Rs),) + xs.shape[1:], xs.dtype)
+            ext = jax.lax.dynamic_update_slice(ext, xfull, (0,) * ext.ndim)
+            return ext[:target_len]
+        left, right = halo_parts(xs)
+        return paste(jnp.concatenate([left, xs, right]), H, target_len)
 
     x_spec = P() if strategy == "replicated" else P(axis)
 
@@ -435,23 +690,66 @@ def _build_sharded_call(op: ShardedPreparedSpMV):
         Lp = (nblocks + 1) * W
         gather_mode, interpret = base.gather_mode, base.interpret
         chunk = base.params.gather_chunk
-        has_scale = op.t_scale is not None
+        has_scale = "scale" in arrs or "i_scale" in arrs
 
-        def body(v, lc, lr, wb, *rest):
-            # rest = ([stacked scales,] x shard) — int8 values carry scales
-            sc = rest[0][0] if has_scale else None
-            xp = distribute_x(rest[-1], Lp)
+        def launch(v, lc, lr, wb, xp, sc):
             return spmv_csrk_tiles_pallas(
-                v[0], lc[0], lr[0], wb[0], xp, sc,
+                v, lc, lr, wb, xp, sc,
                 rows_per_tile=R, window=W, gather_chunk=chunk,
                 gather_mode=gather_mode, interpret=interpret,
             )
 
+        if plan.overlap:
+            Tp = plan.tiles_per_shard
+            names = [
+                "i_vals", "i_lcol", "i_lrow", "i_win", "i_ids",
+                "b_vals", "b_lcol", "b_lrow", "b_win", "b_ids",
+            ]
+            if has_scale:
+                names += ["i_scale", "b_scale"]
+
+            def body(*args):
+                a = dict(zip(names, args[:-1]))
+                xs = args[-1]
+                # phase 1: halo on the wire (no dependence on compute)
+                left, right = halo_parts(xs)
+                # phase 2: interior tiles read only the local x slice
+                y_int = launch(
+                    a["i_vals"][0], a["i_lcol"][0], a["i_lrow"][0],
+                    a["i_win"][0], paste(xs, 0, Lp),
+                    a["i_scale"][0] if has_scale else None,
+                )
+                # phase 3: boundary tiles consume the received halo window
+                xw = paste(jnp.concatenate([left, xs, right]), H, Lp)
+                y_bnd = launch(
+                    a["b_vals"][0], a["b_lcol"][0], a["b_lrow"][0],
+                    a["b_win"][0], xw,
+                    a["b_scale"][0] if has_scale else None,
+                )
+                return combine_tile_rows(
+                    [y_int, y_bnd], [a["i_ids"][0], a["b_ids"][0]],
+                    Tp, R, dtype=y_int.dtype,
+                )
+
+        else:
+            names = ["vals", "lcol", "lrow", "win"]
+            if has_scale:
+                names += ["scale"]
+
+            def body(*args):
+                a = dict(zip(names, args[:-1]))
+                xp = distribute_x(args[-1], Lp)
+                return launch(
+                    a["vals"][0], a["lcol"][0], a["lrow"][0], a["win"][0],
+                    xp, a["scale"][0] if has_scale else None,
+                )
+
         f = shard_map(
             body, mesh=mesh,
-            in_specs=(P(axis),) * (5 if has_scale else 4) + (x_spec,),
+            in_specs=(P(axis),) * len(names) + (x_spec,),
             out_specs=P(axis), check_rep=False,
         )
+        arg_arrays = tuple(arrs[k] for k in names)
         rem = tiles.remainder_nnz
         rem_row, rem_col, rem_val = tiles.rem_row, tiles.rem_col, tiles.rem_val
 
@@ -467,10 +765,7 @@ def _build_sharded_call(op: ShardedPreparedSpMV):
             return y
 
         jitted = jax.jit(call)
-        extra = (op.t_scale,) if has_scale else ()
-        return lambda x: jitted(
-            op.t_vals, op.t_lcol, op.t_lrow, op.t_win, *extra, x
-        )
+        return lambda x: jitted(*arg_arrays, x)
 
     if base.backend == "sellcs":
         from repro.kernels.spmv_sellcs import spmv_sellcs_pallas
@@ -481,21 +776,57 @@ def _build_sharded_call(op: ShardedPreparedSpMV):
         row_perm = st.row_perm
         gather_mode, interpret = base.gather_mode, base.interpret
         chunk = base.params.gather_chunk
-        has_scale = op.s_scale is not None
+        has_scale = "scale" in arrs or "i_scale" in arrs
 
-        def body(v, c, *rest):
-            sc = rest[0][0] if has_scale else None
-            xp = distribute_x(rest[-1], n_pad)
+        def launch(v, c, xp, sc):
             return spmv_sellcs_pallas(
-                v[0], c[0], xp, sc, gather_chunk=chunk,
+                v, c, xp, sc, gather_chunk=chunk,
                 gather_mode=gather_mode, interpret=interpret,
             )
 
+        if plan.overlap:
+            Tp, C = plan.tiles_per_shard, plan.rows_per_tile
+            names = ["i_vals", "i_cols", "i_ids", "b_vals", "b_cols", "b_ids"]
+            if has_scale:
+                names += ["i_scale", "b_scale"]
+
+            def body(*args):
+                a = dict(zip(names, args[:-1]))
+                xs = args[-1]
+                left, right = halo_parts(xs)
+                y_int = launch(
+                    a["i_vals"][0], a["i_cols"][0], paste(xs, 0, n_pad),
+                    a["i_scale"][0] if has_scale else None,
+                )
+                xw = paste(jnp.concatenate([left, xs, right]), H, n_pad)
+                y_bnd = launch(
+                    a["b_vals"][0], a["b_cols"][0], xw,
+                    a["b_scale"][0] if has_scale else None,
+                )
+                return combine_tile_rows(
+                    [y_int, y_bnd], [a["i_ids"][0], a["b_ids"][0]],
+                    Tp, C, dtype=y_int.dtype,
+                )
+
+        else:
+            names = ["vals", "cols"]
+            if has_scale:
+                names += ["scale"]
+
+            def body(*args):
+                a = dict(zip(names, args[:-1]))
+                xp = distribute_x(args[-1], n_pad)
+                return launch(
+                    a["vals"][0], a["cols"][0], xp,
+                    a["scale"][0] if has_scale else None,
+                )
+
         f = shard_map(
             body, mesh=mesh,
-            in_specs=(P(axis),) * (3 if has_scale else 2) + (x_spec,),
+            in_specs=(P(axis),) * len(names) + (x_spec,),
             out_specs=P(axis), check_rep=False,
         )
+        arg_arrays = tuple(arrs[k] for k in names)
 
         def call(*args):
             x = args[-1]
@@ -505,35 +836,12 @@ def _build_sharded_call(op: ShardedPreparedSpMV):
             return out.at[row_perm].set(y_sorted)[:m]
 
         jitted = jax.jit(call)
-        extra = (op.s_scale,) if has_scale else ()
-        return lambda x: jitted(op.s_vals, op.s_cols, *extra, x)
+        return lambda x: jitted(*arg_arrays, x)
 
-    # CSR-2 / CPU fallback: pure-jnp oracle inside shard_map (no tile view).
+    # CSR-2 / CPU fallback: pure-jnp oracle inside shard_map (no tile view) —
+    # the same plan executor the legacy dist_spmv_* shims use.
     S = op.c_csr
-
-    def body(rp, ci, vl, xs):
-        if strategy == "halo":
-            d = jax.lax.axis_index(axis)
-            left = jax.lax.ppermute(
-                xs[-H:], axis, [(i, (i + 1) % D) for i in range(D)]
-            )
-            right = jax.lax.ppermute(
-                xs[:H], axis, [(i, (i - 1) % D) for i in range(D)]
-            )
-            x_win = jnp.concatenate([left, xs, right])
-            return _local_spmv(rp[0], ci[0], vl[0], x_win,
-                               col_offset=d * Rs - H)
-        if strategy == "allgather":
-            x_full = jax.lax.all_gather(xs, axis, tiled=True)
-        else:
-            x_full = xs
-        return _local_spmv(rp[0], ci[0], vl[0], x_full)
-
-    f = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), x_spec),
-        out_specs=P(axis), check_rep=False,
-    )
+    f = _csr_plan_shard_map(plan, mesh, axis)
 
     def call(rp, ci, vl, x):
         xin = x if strategy == "replicated" else _pad_rows(x, D * Rs)
@@ -550,6 +858,7 @@ def shard_prepared(
     axis: str = "data",
     x_strategy: str = "auto",
     A: CSRMatrix | None = None,
+    halo_overlap: bool | None = None,
 ) -> ShardedPreparedSpMV:
     """Partition a single-device :class:`PreparedSpMV` across ``mesh``.
 
@@ -558,6 +867,13 @@ def shard_prepared(
     per-shard stacks — CSR-k: whole SSR tiles; SELL-C-σ: whole C-row chunks;
     CSR-2 (CPU): raw row blocks — so every shard runs the *same* kernel with
     the same static shapes as the global launch (the bit-for-bit property).
+
+    On top of the partition, a :class:`ShardPlan` is built: per-tile column
+    reach classifies each shard's tiles as interior or boundary, the halo
+    edge schedule keeps only the sides boundary tiles actually read, and —
+    when the halo strategy is active on a tile backend and enough tiles are
+    interior — execution is staged so the interior launch overlaps the
+    exchange.
 
     Args:
       base: the prepared single-device operator (any backend).
@@ -571,6 +887,12 @@ def shard_prepared(
         for CSR-k, original for SELL-C-σ); used only to compute per-shard
         statistics for the registry's per-shard format decisions.  Falls back
         to the operator's own CSR view when available.
+      halo_overlap: None (default) lets the plan decide — overlap when the
+        halo strategy is active, the backend has a tile view, and at least
+        ``OVERLAP_MIN_INTERIOR`` of the non-empty tiles are interior.  True
+        forces overlap whenever it is structurally possible; False forces
+        the blocking schedule (useful for A/B benchmarking — results are
+        bit-for-bit identical either way).
 
     Returns:
       A :class:`ShardedPreparedSpMV`; call it like the base operator.
@@ -582,67 +904,46 @@ def shard_prepared(
         )
     D = int(mesh.shape[axis])
 
-    kw = dict(base=base, mesh=mesh, axis=axis, num_shards=D)
-    real_cols = []
-
+    # -- partition geometry + per-tile column reach -------------------------
+    tile_backend = False
+    sh = None
     if base.backend == "csrk" and base.tiles is not None:
         tiles = base.tiles
-        T, R = tiles.num_tiles, tiles.rows_per_tile
-        W = tiles.window
+        T, R, W = tiles.num_tiles, tiles.rows_per_tile, tiles.window
         Tp = -(-T // D)
         Rs = Tp * R
-        v = np.asarray(tiles.vals)
-        lc = np.asarray(tiles.local_col)
-        wb = np.asarray(tiles.win_block)
-        for d in range(D):
-            t0, t1 = d * Tp, min((d + 1) * Tp, T)
-            cols = [
-                wb[t] * W + lc[t][v[t] != 0]
-                for t in range(t0, t1)
-                if (v[t] != 0).any()
-            ]
-            real_cols.append(np.concatenate(cols) if cols else None)
-        kw.update(
-            rows_per_shard=Rs,
-            t_vals=_stack_shards(v, D, Tp),
-            t_lcol=_stack_shards(lc, D, Tp),
-            t_lrow=_stack_shards(np.asarray(tiles.local_row), D, Tp),
-            t_win=_stack_shards(wb, D, Tp),
-        )
-        if tiles.val_scale is not None:
-            kw.update(t_scale=_stack_shards(np.asarray(tiles.val_scale), D, Tp))
+        lo, hi = tiles.col_reach()
+        tile_backend = True
         src = A if A is not None else base.csrk.csr
     elif base.backend == "sellcs":
         st = base.sell_tiles
-        T, C = st.vals.shape[0], st.vals.shape[1]
+        T, R = int(st.vals.shape[0]), int(st.vals.shape[1])   # R = chunk C
         Tp = -(-T // D)
-        Rs = Tp * C
-        v = np.asarray(st.vals)
-        c = np.asarray(st.col_idx)
-        for d in range(D):
-            t0, t1 = d * Tp, min((d + 1) * Tp, T)
-            mask = v[t0:t1] != 0
-            real_cols.append(c[t0:t1][mask] if mask.any() else None)
-        kw.update(
-            rows_per_shard=Rs,
-            s_vals=_stack_shards(v, D, Tp),
-            s_cols=_stack_shards(c, D, Tp),
-        )
-        if st.val_scale is not None:
-            kw.update(s_scale=_stack_shards(np.asarray(st.val_scale), D, Tp))
+        Rs = Tp * R
+        lo, hi = st.col_reach()
+        tile_backend = True
         src = A
     else:
         # CSR-2 fallback: no tile view — raw row partitioning + oracle.
         src = A if A is not None else base.csrk.csr
         sh = shard_csr(src, D)
+        Tp = R = 0
         Rs = sh.rows_per_shard
+
+    # per-shard real-column extents (the only inputs the halo math needs)
+    if tile_backend:
+        reach = _shard_reach(lo, hi, Tp, D)
+    else:
         rp = np.asarray(sh.row_ptr)
         ci = np.asarray(sh.col_idx)
         vl = np.asarray(sh.vals)
+        reach = []
         for d in range(D):
             k = int(rp[d, -1])
-            real_cols.append(ci[d, :k][vl[d, :k] != 0] if k else None)
-        kw.update(rows_per_shard=Rs, c_csr=sh)
+            cols = ci[d, :k][vl[d, :k] != 0] if k else np.empty(0, np.int64)
+            reach.append(
+                (int(cols.min()), int(cols.max())) if len(cols) else None
+            )
 
     # -- per-shard statistics + registry decisions (introspection) ----------
     # Uses the operator's actual (tile-granular) row partition, so the
@@ -676,13 +977,103 @@ def shard_prepared(
     halo = 0
     demoted = False
     if x_strategy == "halo":
-        H_req = _required_halo(real_cols, Rs, D)
+        H_req = _required_halo(reach, Rs, D)
         halo = max(_round_up(max(H_req, 1), _LANE), _LANE)
         if halo > Rs:
             # a shard reaches beyond its neighbours — halo cannot be exchanged
             # with a single ppermute pair; fall back to the O(n) gather.
             x_strategy, halo = "allgather", 0
             demoted = True
+
+    # -- interior/boundary classification + overlap decision ----------------
+    interior_ids: Tuple = ()
+    boundary_ids: Tuple = ()
+    interior_frac = 1.0
+    left_edges: Tuple = ()
+    right_edges: Tuple = ()
+    overlap = False
+    if tile_backend:
+        interior_ids, boundary_ids, interior_frac = classify_tile_reach(
+            lo, hi, tiles_per_shard=Tp, rows_per_shard=Rs, num_shards=D
+        )
+    if x_strategy == "halo":
+        if tile_backend:
+            left_edges, right_edges = _halo_edges(reach, Rs, D)
+            # overlap needs at least one real interior tile (something to hide
+            # the exchange behind) and one boundary tile (something to wait).
+            can_overlap = 0.0 < interior_frac < 1.0
+            if halo_overlap is None:
+                overlap = can_overlap and interior_frac >= OVERLAP_MIN_INTERIOR
+            else:
+                overlap = bool(halo_overlap) and can_overlap
+        else:
+            # oracle fallback: single monolithic segment-sum — keep the
+            # historical full-ring schedule (exact behaviour preservation).
+            left_edges, right_edges = _ring_edges(D)
+
+    plan = ShardPlan(
+        strategy=x_strategy,
+        num_shards=D,
+        rows_per_shard=Rs,
+        halo=halo,
+        tiles_per_shard=Tp,
+        rows_per_tile=R,
+        overlap=overlap,
+        interior_fraction=interior_frac,
+        interior_ids=interior_ids,
+        boundary_ids=boundary_ids,
+        left_edges=left_edges,
+        right_edges=right_edges,
+    )
+
+    # -- stack the kernel arrays in the layout the plan executes ------------
+    arrs: dict = {}
+    if base.backend == "csrk" and base.tiles is not None:
+        v = np.asarray(tiles.vals)
+        lc = np.asarray(tiles.local_col)
+        lr = np.asarray(tiles.local_row)
+        wb = np.asarray(tiles.win_block)
+        scale = None if tiles.val_scale is None else np.asarray(tiles.val_scale)
+        if overlap:
+            Ti, Tb = plan.num_interior, plan.num_boundary
+            for key, ids, T_sub in (("i", interior_ids, Ti),
+                                    ("b", boundary_ids, Tb)):
+                arrs[f"{key}_vals"] = _stack_tile_subset(v, ids, D, Tp, T_sub)
+                arrs[f"{key}_lcol"] = _stack_tile_subset(lc, ids, D, Tp, T_sub)
+                arrs[f"{key}_lrow"] = _stack_tile_subset(lr, ids, D, Tp, T_sub)
+                arrs[f"{key}_win"] = _stack_tile_subset(wb, ids, D, Tp, T_sub)
+                arrs[f"{key}_ids"] = _stack_subset_ids(ids, D, Tp, T_sub)
+                if scale is not None:
+                    arrs[f"{key}_scale"] = _stack_tile_subset(
+                        scale, ids, D, Tp, T_sub
+                    )
+        else:
+            arrs["vals"] = _stack_shards(v, D, Tp)
+            arrs["lcol"] = _stack_shards(lc, D, Tp)
+            arrs["lrow"] = _stack_shards(lr, D, Tp)
+            arrs["win"] = _stack_shards(wb, D, Tp)
+            if scale is not None:
+                arrs["scale"] = _stack_shards(scale, D, Tp)
+    elif base.backend == "sellcs":
+        v = np.asarray(st.vals)
+        c = np.asarray(st.col_idx)
+        scale = None if st.val_scale is None else np.asarray(st.val_scale)
+        if overlap:
+            Ti, Tb = plan.num_interior, plan.num_boundary
+            for key, ids, T_sub in (("i", interior_ids, Ti),
+                                    ("b", boundary_ids, Tb)):
+                arrs[f"{key}_vals"] = _stack_tile_subset(v, ids, D, Tp, T_sub)
+                arrs[f"{key}_cols"] = _stack_tile_subset(c, ids, D, Tp, T_sub)
+                arrs[f"{key}_ids"] = _stack_subset_ids(ids, D, Tp, T_sub)
+                if scale is not None:
+                    arrs[f"{key}_scale"] = _stack_tile_subset(
+                        scale, ids, D, Tp, T_sub
+                    )
+        else:
+            arrs["vals"] = _stack_shards(v, D, Tp)
+            arrs["cols"] = _stack_shards(c, D, Tp)
+            if scale is not None:
+                arrs["scale"] = _stack_shards(scale, D, Tp)
 
     # -- telemetry: the sharding decisions, as metrics rather than only as
     # operator attributes (docs/observability.md) ---------------------------
@@ -691,17 +1082,29 @@ def shard_prepared(
         reg.gauge("distributed", "num_shards", D, unit="count")
         reg.gauge("distributed", "rows_per_shard", Rs, unit="count")
         reg.gauge("distributed", "halo_rows", halo, unit="count")
+        reg.gauge("distributed", "interior_fraction", interior_frac,
+                  unit="fraction")
+        reg.gauge("distributed", "collective_bytes",
+                  plan.collective_bytes(), unit="bytes")
         reg.counter("distributed", f"x_strategy.{x_strategy}")
         if demoted:
             reg.counter("distributed", "halo_demoted_to_allgather")
+        if x_strategy == "halo":
+            reg.counter(
+                "distributed",
+                "halo_overlap.on" if overlap else "halo_overlap.off",
+            )
         for b in shard_backends:
             reg.counter("distributed", f"shard_backend.{b}")
 
     return ShardedPreparedSpMV(
-        x_strategy=x_strategy,
+        base=base,
+        mesh=mesh,
+        axis=axis,
         x_strategy_requested=requested,
-        halo=halo,
+        plan=plan,
         shard_stats=tuple(shard_stats),
         shard_backends=shard_backends,
-        **kw,
+        shard_arrays=arrs,
+        c_csr=sh,
     )

@@ -324,6 +324,7 @@ def prepare(
     mesh=None,
     shard_axis: str = "data",
     x_strategy: str = "auto",
+    halo_overlap: bool | None = None,
 ):
     """Full heterogeneous SpMV setup pipeline (paper Sec. 3–4 + registry).
 
@@ -387,6 +388,10 @@ def prepare(
       x_strategy: x distribution for the sharded operator: "auto" (O(1)
         selection from the matrix stats), "replicated", "allgather" or
         "halo".  Ignored when ``mesh`` is None.
+      halo_overlap: staged halo execution for the sharded operator: None
+        (default) lets the :class:`~repro.core.distributed.ShardPlan` decide
+        from the interior tile fraction, True forces overlap when possible,
+        False forces the blocking schedule.  Ignored when ``mesh`` is None.
 
     Returns:
       A :class:`PreparedSpMV` (or :class:`ShardedPreparedSpMV` when ``mesh``
@@ -408,7 +413,8 @@ def prepare(
 
         src = base.csrk.csr if base.backend == "csrk" else A
         return shard_prepared(
-            base, mesh, axis=shard_axis, x_strategy=x_strategy, A=src
+            base, mesh, axis=shard_axis, x_strategy=x_strategy, A=src,
+            halo_overlap=halo_overlap,
         )
     if tile_layout not in ("bucketed", "monolithic"):
         raise ValueError(

@@ -37,6 +37,45 @@ def _pad_x_to_blocks(x: jax.Array, window: int) -> jax.Array:
     return _pad_rows(x, (nblocks + 1) * window)
 
 
+def combine_tile_rows(parts, tile_ids, num_tiles: int, rows_per_tile: int,
+                      dtype=None) -> jax.Array:
+    """Scatter partial-tile-set kernel outputs back into contiguous rows.
+
+    The Pallas kernels are pure in their tile arrays, so any *subset* of
+    tiles can be launched on its own compacted array stack; each launch
+    returns ``[T_sub · R (, B)]`` rows in subset order.  This helper places
+    every subset's rows at its tiles' home positions — the shared machinery
+    behind the slot-bucketed launcher (PR 5) and the distributed layer's
+    interior/boundary split launches.
+
+    Tile row ranges are disjoint, so the scatter order cannot change any
+    value: the result is bit-for-bit the monolithic launch over the union of
+    the subsets.  Ids equal to ``num_tiles`` act as a dump slot for padding
+    tiles (uniform-shape SPMD launches pad subsets with inert tiles) and are
+    dropped.
+
+    Args:
+      parts: per-subset kernel outputs, each ``[T_sub · R]`` or
+        ``[T_sub · R, B]``.
+      tile_ids: per-subset int32 id arrays (``[T_sub]``), home tile of each
+        subset tile; ``num_tiles`` = dump.
+      num_tiles: tiles in the combined row space.
+      rows_per_tile: R (CSR-k SSR rows; SELL-C-σ chunk height C).
+      dtype: output dtype (defaults to ``parts[0].dtype``).
+
+    Returns:
+      ``[num_tiles · R (, B)]`` combined rows; uncovered tiles are zero.
+    """
+    first = parts[0]
+    tail = first.shape[1:]
+    if dtype is None:
+        dtype = first.dtype
+    out = jnp.zeros((num_tiles + 1, rows_per_tile) + tail, dtype)
+    for y, ids in zip(parts, tile_ids):
+        out = out.at[ids].set(y.reshape((ids.shape[0], rows_per_tile) + tail))
+    return out[:num_tiles].reshape((num_tiles * rows_per_tile,) + tail)
+
+
 @annotated("repro.spmv_csrk", count_section="kernels")
 def spmv_csrk(
     tiles: CSRkTiles,
@@ -97,10 +136,8 @@ def spmv_csrk_bucketed(
     """
     R = buckets.rows_per_tile
     xp = _pad_x_to_blocks(x, buckets.window)
-    tail = x.shape[1:]
-    y_tiles = jnp.zeros((buckets.num_tiles, R) + tail, x.dtype)
-    for b, ids in zip(buckets.buckets, buckets.tile_ids):
-        y_b = spmv_csrk_tiles_pallas(
+    parts = [
+        spmv_csrk_tiles_pallas(
             b.vals,
             b.local_col,
             b.local_row,
@@ -113,8 +150,11 @@ def spmv_csrk_bucketed(
             gather_mode=gather_mode,  # type: ignore[arg-type]
             interpret=interpret,
         )
-        y_tiles = y_tiles.at[ids].set(y_b.reshape((b.num_tiles, R) + tail))
-    y = y_tiles.reshape((buckets.num_tiles * R,) + tail)[: buckets.shape[0]]
+        for b in buckets.buckets
+    ]
+    y = combine_tile_rows(
+        parts, buckets.tile_ids, buckets.num_tiles, R, dtype=x.dtype
+    )[: buckets.shape[0]]
     if buckets.remainder_nnz:
         rem_val = buckets.rem_val.astype(y.dtype)
         if x.ndim == 2:

@@ -37,6 +37,7 @@ from repro.sparse.sellcs import (  # noqa: F401
 from repro.sparse.stats import (  # noqa: F401
     REGULAR_ROW_VAR_MAX,
     MatrixStats,
+    classify_tile_reach,
     compute_shard_stats,
     compute_stats,
 )

@@ -170,6 +170,24 @@ class SELLCSTiles:
         real = float(np.count_nonzero(np.asarray(self.vals)))
         return (self.vals.size - real) / max(real, 1.0)
 
+    def col_reach(self):
+        """Per-chunk real column reach ``(lo, hi)`` (host-side, numpy).
+
+        Mirrors :meth:`repro.sparse.csrk.CSRkTiles.col_reach` at C-row-chunk
+        granularity: only ``vals != 0`` slots constrain the reach, empty
+        chunks report ``lo > hi``.  Feeds
+        :func:`repro.sparse.stats.classify_tile_reach` for the distributed
+        layer's interior/boundary split.
+        """
+        v = np.asarray(self.vals).reshape(self.num_chunks, -1)
+        c = np.asarray(self.col_idx).astype(np.int64).reshape(self.num_chunks, -1)
+        mask = v != 0
+        lo = np.where(mask, c, np.iinfo(np.int32).max).min(
+            axis=1, initial=np.iinfo(np.int32).max
+        )
+        hi = np.where(mask, c, -1).max(axis=1, initial=-1)
+        return lo, hi
+
     def modeled_bytes(self) -> int:
         """Modeled per-SpMV HBM traffic of the Pallas launch.
 

@@ -104,3 +104,67 @@ def compute_shard_stats(
         r1 = min((d + 1) * rows_per_shard, m)
         out.append(compute_stats(A.row_slice(r0, r1)))
     return out
+
+
+def classify_tile_reach(
+    col_lo,
+    col_hi,
+    *,
+    tiles_per_shard: int,
+    rows_per_shard: int,
+    num_shards: int,
+):
+    """Split each shard's tiles into interior and boundary sets by column reach.
+
+    A tile is **interior** when every real column it reads lies inside its
+    shard's own x slice ``[d·rows_per_shard, (d+1)·rows_per_shard)`` — its
+    SpMV needs no remote x at all, so it can run while the halo exchange is
+    still in flight.  Everything else is **boundary** and must wait for the
+    received halo.  This is the tile-granular version of the Band-k overhang
+    argument: after banding, only tiles within ~bandwidth of a shard edge can
+    be boundary.
+
+    Tiles are assigned to shards contiguously (tile ``t`` → shard
+    ``t // tiles_per_shard``), matching the distributed layer's partition.
+    Empty tiles (``col_hi < col_lo`` — all padding) are inert and counted as
+    interior, but excluded from ``interior_fraction``, which is the fraction
+    of *non-empty* tiles that are interior — the quantity that decides
+    whether overlapping the exchange can pay at all.
+
+    Args:
+      col_lo / col_hi: per-tile real column reach (``CSRkTiles.col_reach`` /
+        ``SELLCSTiles.col_reach``), in absolute column indices.
+      tiles_per_shard: local tiles per shard (``ceil(T / num_shards)``).
+      rows_per_shard: kernel-space rows (= x slice length) per shard.
+      num_shards: mesh axis size.
+
+    Returns:
+      ``(interior_ids, boundary_ids, interior_fraction)`` — two
+      ``num_shards``-tuples of int32 arrays of *local* tile ids, plus the
+      global non-empty interior fraction (1.0 when there are no real tiles).
+    """
+    col_lo = np.asarray(col_lo)
+    col_hi = np.asarray(col_hi)
+    T = int(col_lo.shape[0])
+    interior, boundary = [], []
+    n_interior = n_real = 0
+    for d in range(num_shards):
+        t0 = d * tiles_per_shard
+        t1 = min(t0 + tiles_per_shard, T)
+        x0 = d * rows_per_shard
+        x1 = x0 + rows_per_shard
+        ii, bb = [], []
+        for t in range(t0, t1):
+            if col_hi[t] < col_lo[t]:          # all-padding tile: inert
+                ii.append(t - t0)
+                continue
+            n_real += 1
+            if x0 <= col_lo[t] and col_hi[t] < x1:
+                ii.append(t - t0)
+                n_interior += 1
+            else:
+                bb.append(t - t0)
+        interior.append(np.asarray(ii, np.int32))
+        boundary.append(np.asarray(bb, np.int32))
+    frac = n_interior / n_real if n_real else 1.0
+    return tuple(interior), tuple(boundary), frac

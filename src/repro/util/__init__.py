@@ -1,0 +1,1 @@
+"""Process-level utilities that must not import jax at module import time."""
