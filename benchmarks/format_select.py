@@ -6,6 +6,14 @@ configurations — auto, forced CSR-k, forced SELL-C-σ — and reports per-matr
 stats (nnz/row variance, the routing signal), which backend auto picked,
 wall time of each path's jnp computation, and storage/padding overheads.
 
+:func:`run_adversarial` extends the sweep to the registry's two newest
+regimes — ``configs.spmv_suite.ADVERSARIAL``'s Zipf power-law (hub rows +
+empty rows) and fringed-stencil families — timing **all four** executable
+backends (csrk, sellcs, segsum, diahybrid) so the routing thresholds
+(``SEGSUM_ROW_SKEW_MIN``, ``DIA_FRACTION_MIN``) are justified by measurement,
+not taste.  CI asserts the headline wins: segsum beats SELL-C-σ on the
+power-law family, the DIA hybrid beats CSR-k on the stencil family.
+
 The question the table answers: does the O(1) selector pick the backend that
 is actually fastest/leanest on each matrix class?  (Paper Sec. 6 says CSR-k
 on regular; Kreutzer et al. say SELL-C-σ on irregular; the registry encodes
@@ -15,19 +23,19 @@ NOTE on timing: as in benchmarks/formats.py, ``interpret=True`` Pallas wall
 time is not meaningful, so each backend is timed via its jnp oracle
 (identical arithmetic and memory layout to the kernel).
 
-Usage: PYTHONPATH=src python benchmarks/format_select.py [scale]
+Usage: PYTHONPATH=src python benchmarks/format_select.py [scale] [--json PATH]
 """
 from __future__ import annotations
-
-import sys
 
 import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, gflops, relative_performance, time_fn
-from repro.configs.spmv_suite import SUITE
+from repro.configs.spmv_suite import SUITE, load_adversarial
 from repro.core.spmv import prepare
 from repro.kernels import ref
+
+ALL_BACKENDS = ("csrk", "sellcs", "segsum", "diahybrid")
 
 
 def powerlaw(m: int, scale: float = 4.0, seed: int = 0):
@@ -46,13 +54,27 @@ def powerlaw(m: int, scale: float = 4.0, seed: int = 0):
 
 
 def _time_backend(op, x):
-    """Time the jnp computation equivalent to the op's kernel path."""
+    """Time the jnp computation equivalent to the op's kernel path.
+
+    The oracle closure is jitted: un-jitted eager dispatch overhead per
+    primitive would otherwise swamp the slot-count differences the formats
+    exist to create (XLA fuses each oracle into the same handful of
+    bandwidth-bound loops the Pallas kernel runs).
+    """
+    import jax
+
     if op.backend == "sellcs":
         sell = op.sell
-        return time_fn(lambda v: ref.spmv_sellcs(sell, v), x)
-    xr = x[jnp.asarray(op.perm)]
+        return time_fn(jax.jit(lambda v: ref.spmv_sellcs(sell, v)), x)
+    if op.backend == "segsum":
+        seg = op.segsum
+        return time_fn(jax.jit(lambda v: ref.spmv_segsum(seg, v)), x)
+    if op.backend == "diahybrid":
+        dia = op.dia
+        return time_fn(jax.jit(lambda v: ref.spmv_diahybrid(dia, v)), x)
+    perm = jnp.asarray(op.perm)
     tiles = op.tiles
-    return time_fn(lambda v: ref.spmv_csrk_tiles(tiles, v), xr)
+    return time_fn(jax.jit(lambda v: ref.spmv_csrk_tiles(tiles, v[perm])), x)
 
 
 def run(scale: int = 1024) -> list:
@@ -96,10 +118,100 @@ def run(scale: int = 1024) -> list:
     return rows
 
 
+def json_rows(rows: list) -> list:
+    """Row copies safe for ``--json`` record flattening.
+
+    Drops the measured ``best`` label and coerces ``picked_is_best`` to 0/1:
+    string/bool fields become part of the flattened record *name*, and
+    "which backend happened to win the timing" is a measurement that can
+    flip run-to-run — embedding it would silently detach the record from
+    the cached baseline ``check_regression.py`` gates against.  The stable
+    routing decision (``picked``) stays in the name; CI asserts on it.
+    """
+    out = []
+    for r in rows:
+        r = dict(r)
+        r.pop("best", None)
+        r["picked_is_best"] = int(r.get("picked_is_best", False))
+        out.append(r)
+    return out
+
+
+def run_adversarial(scale: int = 64) -> list:
+    """Sweep the ADVERSARIAL families over every executable backend.
+
+    Each family is prepared four times with the format forced and once with
+    ``format="auto"``; every path is timed via its jnp oracle.  The row
+    records which backend the registry picked, which was measured fastest,
+    and the per-backend times — the evidence behind the segsum/diahybrid
+    routing thresholds.
+    """
+    rows = []
+    for name, A in load_adversarial(scale).items():
+        x = jnp.asarray(
+            np.random.default_rng(0).standard_normal(A.n), jnp.float32
+        )
+        auto = prepare(A, device="tpu_v5e", format="auto", value_dtype="f32")
+        times = {}
+        for forced in ALL_BACKENDS:
+            op = auto if forced == auto.backend else prepare(
+                A, device="tpu_v5e", format=forced, value_dtype="f32"
+            )
+            times[forced] = _time_backend(op, x)
+        best = min(times, key=times.get)
+        st = auto.stats
+        rows.append({
+            "matrix": name,
+            "n": A.m,
+            "nnz": A.nnz,
+            "row_var": round(st.row_var, 2),
+            "row_skew": round(st.row_skew, 2),
+            "diag_fraction": round(st.diag_fraction, 3),
+            "picked": auto.backend,
+            "best": best,
+            "picked_is_best": auto.backend == best,
+            **{f"t_{b}_us": round(times[b] * 1e6, 1) for b in ALL_BACKENDS},
+            "gflops_auto": round(gflops(A.nnz, times[auto.backend]), 3),
+            "rel_vs_runnerup_pct": round(relative_performance(
+                min(t for b, t in times.items() if b != auto.backend),
+                times[auto.backend],
+            ), 1),
+            "pad_overhead": round(auto.padding_overhead(), 3),
+        })
+    return rows
+
+
 if __name__ == "__main__":
-    scale = int(sys.argv[1]) if len(sys.argv) > 1 else 1024
-    emit(run(scale), [
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("scale", nargs="?", type=int, default=1024,
+                    help="suite down-scale factor (adversarial families use "
+                         "the spmv_suite scale knob directly)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help='write rows as {"section": "formats", ...} records')
+    args = ap.parse_args()
+    header = [
         "matrix", "n", "nnz", "row_var", "picked", "best", "picked_is_best",
         "t_csrk_us", "t_sellcs_us", "gflops_auto", "rel_vs_other_pct",
         "pad_overhead",
+    ]
+    suite_rows = run(args.scale)
+    emit(suite_rows, header)
+    adv_rows = run_adversarial(min(args.scale, 256))
+    print()
+    emit(adv_rows, [
+        "matrix", "n", "nnz", "row_var", "row_skew", "diag_fraction",
+        "picked", "best", "picked_is_best",
+    ] + [f"t_{b}_us" for b in ALL_BACKENDS] + [
+        "gflops_auto", "rel_vs_runnerup_pct", "pad_overhead",
     ])
+    if args.json:
+        from benchmarks.run import _flatten
+        from repro.obs import write_records
+
+        write_records(
+            args.json,
+            _flatten("formats", json_rows(suite_rows))
+            + _flatten("formats", json_rows(adv_rows)),
+        )

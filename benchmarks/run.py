@@ -102,6 +102,14 @@ def main() -> None:
         print("## formats (paper Figs. 5/6/8/9)")
         from benchmarks import formats
         records += _flatten("formats", formats.run(scale=scale))
+        print("\n## formats: adversarial families × all four backends")
+        from benchmarks import format_select
+        adv = format_select.run_adversarial(scale=128 if args.quick else 64)
+        format_select.emit(adv, [
+            "matrix", "n", "nnz", "row_var", "row_skew", "diag_fraction",
+            "picked", "best", "picked_is_best",
+        ] + [f"t_{b}_us" for b in format_select.ALL_BACKENDS])
+        records += _flatten("formats", format_select.json_rows(adv))
     if section("spmm"):
         print("\n## spmm (multi-vector fast path: batched vs looped)")
         from benchmarks import spmm

@@ -12,6 +12,13 @@ Families:
   * circuit              → grid Laplacian + random long-range couplings
   * thermal/optimization → 9-point Laplacian variants
   * structural FEM       → block-dense Laplacians (bmwcra-style dense rows)
+
+On top of the Table 2 analogue, :data:`ADVERSARIAL` holds two stress
+families that deliberately defeat the row-balanced formats (power-law hub
+rows with empty rows; a mostly-diagonal stencil with a low-occupancy
+fringe).  They are intentionally *not* part of :data:`SUITE` — the suite's
+routing decisions are pinned by tests — and load via
+:func:`load_adversarial`.
 """
 from __future__ import annotations
 
@@ -218,3 +225,101 @@ def load_suite(scale: int = 64, ids: List[int] | None = None) -> Dict[str, CSRMa
             continue
         out[e.name] = e.build(scale)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Adversarial stress families (NOT part of SUITE — see module docstring)
+# ---------------------------------------------------------------------------
+
+def powerlaw_zipf(
+    n: int,
+    seed: int = 17,
+    alpha: float = 1.6,
+    empty_fraction: float = 0.1,
+) -> CSRMatrix:
+    """Power-law (Zipf) row lengths with empty rows (web/social-graph family).
+
+    The adversary for row-balanced formats: a few hub rows hold most of the
+    nnz (``row_skew`` far above ``SEGSUM_ROW_SKEW_MIN``) while ~10% of rows
+    are empty, so any per-row padding scheme (ELL / SELL-C-σ) burns slots on
+    the hubs.  Routes to the segmented-sum backend, which partitions *nnz*
+    instead of rows.
+    """
+    rng = np.random.default_rng(seed)
+    lengths = np.minimum(rng.zipf(alpha, n), n // 4).astype(np.int64)
+    lengths[rng.random(n) < empty_fraction] = 0
+    # guarantee one hub row, so the skew is structural rather than sampled
+    lengths[rng.integers(0, n)] = n // 4
+    rows = np.repeat(np.arange(n), lengths)
+    cols = rng.integers(0, n, rows.shape[0])
+    key = rows.astype(np.int64) * n + cols
+    _, idx = np.unique(key, return_index=True)
+    return csr_from_coo(
+        COOMatrix(
+            jnp.asarray(rows[idx], jnp.int32),
+            jnp.asarray(cols[idx], jnp.int32),
+            jnp.asarray(
+                rng.standard_normal(len(idx)).astype(np.float32), jnp.float32
+            ),
+            (n, n),
+        )
+    )
+
+
+def stencil_fringe(
+    side: int = 64,
+    seed: int = 18,
+    fringe_fraction: float = 0.01,
+    fringe_deg: int = 64,
+) -> CSRMatrix:
+    """9-point stencil plus a low-occupancy fringe (AMR/contact family).
+
+    Almost all nnz sit on dense diagonals (``diag_fraction`` above
+    ``DIA_FRACTION_MIN``), but ~1% of rows carry ``fringe_deg`` random
+    long-range couplings — enough to push ``row_var`` past the regular
+    ceiling, far too few to justify abandoning the diagonal structure.
+    Routes to the DIA+CSR hybrid: diagonals stream through the DIA plane,
+    the fringe rides the CSR remainder.
+    """
+    base = grid_laplacian_2d(side, side, stencil=9)
+    n = base.m
+    rng = np.random.default_rng(seed)
+    rp = np.asarray(base.row_ptr)
+    rows0 = np.repeat(np.arange(n), rp[1:] - rp[:-1])
+    n_fringe = max(1, int(n * fringe_fraction))
+    fr = np.repeat(rng.choice(n, n_fringe, replace=False), fringe_deg)
+    fc = rng.integers(0, n, fr.shape[0])
+    r2 = np.concatenate([rows0, fr])
+    c2 = np.concatenate([np.asarray(base.col_idx), fc])
+    v2 = np.concatenate(
+        [np.asarray(base.vals), np.full(fr.shape[0], 0.01, np.float32)]
+    )
+    key = r2.astype(np.int64) * n + c2
+    _, idx = np.unique(key, return_index=True)   # base values win over fringe
+    return csr_from_coo(
+        COOMatrix(
+            jnp.asarray(r2[idx], jnp.int32),
+            jnp.asarray(c2[idx], jnp.int32),
+            jnp.asarray(v2[idx], jnp.float32),
+            (n, n),
+        )
+    )
+
+
+ADVERSARIAL: Dict[str, Callable[[int], CSRMatrix]] = {
+    "powerlaw_zipf": lambda s: powerlaw_zipf(max(262_144 // s, 2048)),
+    "stencil_fringe": lambda s: stencil_fringe(
+        max(int(np.sqrt(262_144 // s)), 64)
+    ),
+}
+
+
+def load_adversarial(
+    scale: int = 64, names: List[str] | None = None
+) -> Dict[str, CSRMatrix]:
+    """Build the adversarial families at ``scale`` (same knob as the suite)."""
+    return {
+        name: build(scale)
+        for name, build in ADVERSARIAL.items()
+        if names is None or name in names
+    }

@@ -531,7 +531,13 @@ class ShardedPreparedSpMV:
     # -- delegated introspection --------------------------------------------
     @property
     def backend(self) -> str:
-        """The executing backend ("csrk" | "sellcs") — the global decision."""
+        """The executing backend of the base operator — the global decision.
+
+        One of ``"csrk" | "sellcs" | "segsum" | "diahybrid"``.  Only the
+        first two carry a shardable tile view; the irregular-matrix backends
+        decline tile partitioning and execute per-shard through the CSR-2
+        oracle fallback (see :func:`shard_prepared`).
+        """
         return self.base.backend
 
     @property
@@ -868,6 +874,13 @@ def shard_prepared(
     CSR-2 (CPU): raw row blocks — so every shard runs the *same* kernel with
     the same static shapes as the global launch (the bit-for-bit property).
 
+    Backends without a shardable tile view (``segsum``, ``diahybrid``, and
+    CSR-k prepared without tiles) *decline* tile partitioning: rows fall to
+    the CSR-2 raw-row fallback and execute per-shard through the segment-sum
+    oracle inside ``shard_map``.  The decline is observable — a
+    ``distributed/tile_decline.<backend>`` counter fires and the per-shard
+    registry decisions are still recorded in ``shard_backends``.
+
     On top of the partition, a :class:`ShardPlan` is built: per-tile column
     reach classifies each shard's tiles as interior or boundary, the halo
     edge schedule keeps only the sides boundary tiles actually read, and —
@@ -925,7 +938,17 @@ def shard_prepared(
         src = A
     else:
         # CSR-2 fallback: no tile view — raw row partitioning + oracle.
-        src = A if A is not None else base.csrk.csr
+        # segsum/diahybrid land here (their containers are not row-block
+        # shardable), as does CSR-k prepared without tiles (cpu devices).
+        if A is not None:
+            src = A
+        elif base.csrk is not None:
+            src = base.csrk.csr
+        else:
+            raise ValueError(
+                f"backend {base.backend!r} has no shardable tile view and "
+                "no CSR source; pass A= (prepare(A, mesh=...) does this)"
+            )
         sh = shard_csr(src, D)
         Tp = R = 0
         Rs = sh.rows_per_shard
@@ -1096,6 +1119,8 @@ def shard_prepared(
             )
         for b in shard_backends:
             reg.counter("distributed", f"shard_backend.{b}")
+        if not tile_backend:
+            reg.counter("distributed", f"tile_decline.{base.backend}")
 
     return ShardedPreparedSpMV(
         base=base,

@@ -12,7 +12,10 @@ property); the device decides only the *interpretation*.
 ``format="auto"`` additionally runs the registry's O(1) selector
 (:func:`repro.sparse.select_format`) over one-pass matrix statistics: regular
 matrices (nnz/row variance ≤ 10, paper Sec. 6) keep the CSR-k path
-bit-for-bit, irregular ones route to SELL-C-σ (Kreutzer et al.).
+bit-for-bit, irregular ones route to SELL-C-σ (Kreutzer et al.), power-law
+irregular ones (row_skew ≥ 8) to the speculative segmented-sum CSR backend
+(Liu & Vinter), and irregular-but-diagonal ones (diag_fraction ≥ 0.9) to the
+DIA + CSR-remainder hybrid (Fukaya et al.).
 """
 from __future__ import annotations
 
@@ -26,16 +29,21 @@ import numpy as np
 import repro.core.ordering as bandk_mod
 import repro.core.tuner as tuner_mod
 from repro.sparse import (
+    DIAG_OCCUPANCY,
     CSRMatrix,
     CSRkMatrix,
     CSRkTileBuckets,
     CSRkTiles,
+    DIAHybridMatrix,
     MatrixStats,
+    SegSumCSR,
     SELLCSMatrix,
     SELLCSTiles,
     bucket_tiles,
     build_csrk,
     compute_stats,
+    diahybrid_from_csr,
+    segsum_from_csr,
     select_format,
     sellcs_from_csr,
     tiles_from_csrk,
@@ -50,9 +58,10 @@ from repro.obs import annotate, get_registry
 class PreparedSpMV:
     """A tuned, reordered, device-ready SpMV operator y = A x.
 
-    ``backend`` records which registered format won the dispatch ("csrk" or
-    "sellcs"); ``stats`` holds the one-pass summary that drove the decision
-    (None when the format was forced and stats were not needed).
+    ``backend`` records which registered format won the dispatch ("csrk",
+    "sellcs", "segsum" or "diahybrid"); ``stats`` holds the one-pass summary
+    that drove the decision (None when the format was forced and stats were
+    not needed).
     ``fingerprint`` is the content hash of the *source* matrix
     (:meth:`~repro.sparse.CSRMatrix.fingerprint`) stamped at ``prepare``
     time — the identity the serving layer's operator cache keys on.
@@ -60,8 +69,9 @@ class PreparedSpMV:
     ``perm`` maps new index → old index (A was symmetrically permuted), so for
     callers living in the original index space:
         y_old[perm] == P A P^T (x_old[perm])  ⇒  use ``apply_original``.
-    The SELL-C-σ path never permutes A (its σ-sort is internal to the
-    container), so there ``perm`` is the identity.
+    The SELL-C-σ, segsum and diahybrid paths never permute A (SELL's σ-sort
+    is internal to its container; the other two consume CSR order directly),
+    so there ``perm`` is the identity.
     """
 
     csrk: Optional[CSRkMatrix]
@@ -79,6 +89,8 @@ class PreparedSpMV:
     value_dtype: str = "f32"
     fingerprint: Optional[str] = None
     spmm_width: Optional[int] = None
+    segsum: Optional[SegSumCSR] = None
+    dia: Optional[DIAHybridMatrix] = None
 
     def __post_init__(self):
         # Device-resident permutation arrays, built once at prepare() time so
@@ -92,7 +104,9 @@ class PreparedSpMV:
     @property
     def csr(self) -> CSRMatrix:
         if self.csrk is None:
-            raise AttributeError("no CSR view: this operator uses the SELL-C-σ backend")
+            raise AttributeError(
+                f"no CSR view: this operator uses the {self.backend!r} backend"
+            )
         return self.csrk.csr
 
     def __call__(self, x: jax.Array) -> jax.Array:
@@ -141,6 +155,13 @@ class PreparedSpMV:
                 self.sell_tiles, x, gather_mode=self.gather_mode,
                 gather_chunk=chunk, interpret=self.interpret,
             )
+        if self.backend == "segsum":
+            return kops.spmv_segsum(
+                self.segsum, x, gather_mode=self.gather_mode,
+                gather_chunk=chunk, interpret=self.interpret,
+            )
+        if self.backend == "diahybrid":
+            return kops.spmv_diahybrid(self.dia, x, interpret=self.interpret)
         if self.tile_buckets is not None:
             return kops.spmv_csrk_bucketed(
                 self.tile_buckets, x, gather_mode=self.gather_mode,
@@ -183,11 +204,21 @@ class PreparedSpMV:
         if self.backend == "sellcs":
             base = (2 * self.sell.nnz + self.sell.m + 1) * 4
             return self.sell.overhead_bytes() / base
+        if self.backend == "segsum":
+            base = (2 * self.segsum.nnz + self.segsum.m + 1) * 4
+            return self.segsum.overhead_bytes() / base
+        if self.backend == "diahybrid":
+            base = (2 * self.dia.nnz + self.dia.m + 1) * 4
+            return self.dia.overhead_bytes() / base
         return self.csrk.overhead_fraction()
 
     def padding_overhead(self) -> float:
         if self.backend == "sellcs":
             return self.sell.padding_overhead()
+        if self.backend == "segsum":
+            return self.segsum.padding_overhead()
+        if self.backend == "diahybrid":
+            return self.dia.padding_overhead()
         return self.tiles.padding_overhead() if self.tiles is not None else 0.0
 
     def modeled_bytes(self) -> int:
@@ -199,6 +230,10 @@ class PreparedSpMV:
         """
         if self.backend == "sellcs":
             return self.sell_tiles.modeled_bytes()
+        if self.backend == "segsum":
+            return self.segsum.modeled_bytes()
+        if self.backend == "diahybrid":
+            return self.dia.modeled_bytes()
         if self.tile_buckets is not None:
             return self.tile_buckets.modeled_bytes()
         if self.tiles is not None:
@@ -217,7 +252,8 @@ class PreparedSpMV:
         """
         leaves = jax.tree_util.tree_leaves((
             self.csrk, self.tiles, self.tile_buckets, self.sell,
-            self.sell_tiles, self._perm_dev, self._inv_perm_dev,
+            self.sell_tiles, self.segsum, self.dia,
+            self._perm_dev, self._inv_perm_dev,
         ))
         return sum(int(leaf.nbytes) for leaf in leaves
                    if hasattr(leaf, "nbytes"))
@@ -238,6 +274,12 @@ def _record_prepared(op: PreparedSpMV) -> PreparedSpMV:
     with reg.timer("prepare", "phase.device_upload"):
         if op.backend == "sellcs":
             uploads = (op.sell_tiles.vals, op.sell_tiles.col_idx)
+        elif op.backend == "segsum":
+            uploads = (op.segsum.vals, op.segsum.col_idx,
+                       op.segsum.local_seg, op.segsum.seg_row)
+        elif op.backend == "diahybrid":
+            uploads = (op.dia.diag_vals, op.dia.remainder.vals,
+                       op.dia.remainder.col_idx)
         elif op.tiles is not None:
             uploads = (op.tiles.vals, op.tiles.local_col,
                        op.tiles.local_row, op.tiles.win_block)
@@ -252,6 +294,10 @@ def _record_prepared(op: PreparedSpMV) -> PreparedSpMV:
               unit="fraction")
     if op.backend == "sellcs":
         tile_count = int(op.sell_tiles.vals.shape[0])      # C-row chunks
+    elif op.backend == "segsum":
+        tile_count = op.segsum.num_chunks                  # nnz chunks
+    elif op.backend == "diahybrid":
+        tile_count = op.dia.n_diag                         # dense diagonals
     else:
         tile_count = op.tiles.num_tiles if op.tiles is not None else 0
     reg.gauge("prepare", "tile_count", tile_count, unit="count")
@@ -262,7 +308,11 @@ def _record_prepared(op: PreparedSpMV) -> PreparedSpMV:
     return op
 
 
-def _auto_value_dtype(A: CSRMatrix, stats: Optional[MatrixStats]) -> str:
+def _auto_value_dtype(
+    A: CSRMatrix,
+    stats: Optional[MatrixStats],
+    candidates: tuple = ("int8", "bf16"),
+) -> str:
     """Pick the cheapest value dtype whose SpMV error clears the bound.
 
     One host-side probe SpMV against a fixed random x per candidate — int8
@@ -271,6 +321,8 @@ def _auto_value_dtype(A: CSRMatrix, stats: Optional[MatrixStats]) -> str:
     cannot push an auto-routed matrix over the documented limit.  ``stats``
     (when the auto-format pass already computed them) short-circuits the
     probe for tiny matrices where compression cannot pay for its scales.
+    ``candidates`` restricts the dtypes a backend supports (the diahybrid
+    plane has no slot grouping for int8 scales, so it probes bf16 only).
     """
     from repro.optim.compress import (
         INT8_GROUP, dequantize_int8_grouped, quantize_int8_grouped,
@@ -289,19 +341,21 @@ def _auto_value_dtype(A: CSRMatrix, stats: Optional[MatrixStats]) -> str:
     np.add.at(y, rows, vl * x[ci])
     scale = max(float(np.linalg.norm(y)), 1e-30)
 
-    pad = (-nnz) % INT8_GROUP
-    vpad = np.pad(vl, (0, pad))
-    q, s = quantize_int8_grouped(vpad, group=INT8_GROUP)
-    v8 = dequantize_int8_grouped(q, s, group=INT8_GROUP)[:nnz]
-    y8 = np.zeros(A.m, np.float32)
-    np.add.at(y8, rows, v8 * x[ci])
-    if np.linalg.norm(y8 - y) / scale <= 2.5e-2:
-        return "int8"
-    v16 = np.asarray(jnp.asarray(vl).astype(jnp.bfloat16).astype(jnp.float32))
-    y16 = np.zeros(A.m, np.float32)
-    np.add.at(y16, rows, v16 * x[ci])
-    if np.linalg.norm(y16 - y) / scale <= 5e-3:
-        return "bf16"
+    if "int8" in candidates:
+        pad = (-nnz) % INT8_GROUP
+        vpad = np.pad(vl, (0, pad))
+        q, s = quantize_int8_grouped(vpad, group=INT8_GROUP)
+        v8 = dequantize_int8_grouped(q, s, group=INT8_GROUP)[:nnz]
+        y8 = np.zeros(A.m, np.float32)
+        np.add.at(y8, rows, v8 * x[ci])
+        if np.linalg.norm(y8 - y) / scale <= 2.5e-2:
+            return "int8"
+    if "bf16" in candidates:
+        v16 = np.asarray(jnp.asarray(vl).astype(jnp.bfloat16).astype(jnp.float32))
+        y16 = np.zeros(A.m, np.float32)
+        np.add.at(y16, rows, v16 * x[ci])
+        if np.linalg.norm(y16 - y) / scale <= 5e-3:
+            return "bf16"
     return "f32"
 
 
@@ -309,7 +363,7 @@ def prepare(
     A: CSRMatrix,
     device: str = "tpu_v5e",
     *,
-    format: str = "auto",             # "auto" | "csrk" | "sellcs"
+    format: str = "auto",             # "auto" | "csrk" | "sellcs" | "segsum" | "diahybrid"
     reorder: str = "bandk",           # "bandk" | "rcm" | "natural"
     params: tuner_mod.TuningParams | None = None,
     gather_mode: str = "onehot",
@@ -318,6 +372,8 @@ def prepare(
     adaptive: bool = False,
     sell_c: int = 8,
     sell_sigma: int | None = None,
+    segsum_chunk: int = 512,
+    diag_occupancy: float = DIAG_OCCUPANCY,
     value_dtype: str = "f32",         # "f32" | "bf16" | "int8" | "auto"
     tile_layout: str = "bucketed",    # "bucketed" | "monolithic"
     spmm_width: int | None = None,
@@ -336,17 +392,27 @@ def prepare(
       format: storage backend selection:
 
         * ``"auto"`` — compute one-pass :class:`~repro.sparse.MatrixStats`
-          (nnz/row mean + variance, rdensity, post-Band-k bandwidth) and
-          dispatch via the registry's O(1)
+          (nnz/row mean + variance, rdensity, diag_fraction, row_skew,
+          post-Band-k bandwidth) and dispatch via the registry's O(1)
           :func:`~repro.sparse.select_format`: matrices with nnz/row variance
           ≤ 10 (the paper's Sec. 6 regularity bound) take the CSR-k path,
           bit-for-bit identical to ``format="csrk"``; irregular matrices take
-          SELL-C-σ.
+          SELL-C-σ, unless they are power-law skewed (row_skew ≥ 8 →
+          ``segsum``) or near-fully diagonal (diag_fraction ≥ 0.9 →
+          ``diahybrid``).
         * ``"csrk"`` — force the paper's path: Band-k reorder →
           constant-time tune from rdensity → CSR-k build → padded tile view.
         * ``"sellcs"`` — force SELL-C-σ: σ-window sort → C-row chunks →
           per-chunk padded slices → uniform-width Pallas view.  No Band-k
           (the σ-sort is the reordering; ``perm`` stays identity).
+        * ``"segsum"`` — force the speculative segmented-sum CSR backend
+          (Liu & Vinter): equal-nnz chunks independent of row boundaries +
+          a carry/patch scatter — O(nnz) regardless of row-length skew or
+          empty rows.  ``perm`` stays identity.
+        * ``"diahybrid"`` — force the partially-diagonal hybrid (Fukaya et
+          al.): diagonals with occupancy ≥ ``diag_occupancy`` become a DIA
+          plane (shifted dense contraction in Pallas), the rest rides the
+          CSR oracle path.  ``perm`` stays identity.
       reorder: global reordering for the CSR-k path ("bandk" | "rcm" |
         "natural").
       params: explicit :class:`~repro.core.tuner.TuningParams`; None runs the
@@ -360,6 +426,12 @@ def prepare(
         variance-aware bytes-model tuner (beyond-paper; CSR-k path only).
       sell_c / sell_sigma: SELL-C-σ chunk height and sorting window
         (defaults: C=8 sublanes, σ=16·C).
+      segsum_chunk: segsum nnz slots per chunk (rounded up to a 128-lane
+        multiple; segsum backend only).
+      diag_occupancy: dense-diagonal extraction threshold for the diahybrid
+        backend (defaults to the stats pass's
+        :data:`~repro.sparse.DIAG_OCCUPANCY`, keeping the routing signal and
+        the container in agreement).
       value_dtype: storage dtype of the kernel value stream — "f32" (exact),
         "bf16" (2 B/value), "int8" (1 B/value + one f32 scale per 128-slot
         group, the grouped-scale idiom from :mod:`repro.optim.compress`), or
@@ -407,6 +479,7 @@ def prepare(
             gather_mode=gather_mode, gather_chunk=gather_chunk,
             interpret=interpret, adaptive=adaptive,
             sell_c=sell_c, sell_sigma=sell_sigma,
+            segsum_chunk=segsum_chunk, diag_occupancy=diag_occupancy,
             value_dtype=value_dtype, tile_layout="monolithic",
         )
         from repro.core.distributed import shard_prepared
@@ -433,7 +506,9 @@ def prepare(
             format = select_format(stats, device)
     if value_dtype == "auto":
         with reg.timer("prepare", "phase.value_dtype"):
-            value_dtype = _auto_value_dtype(A, stats)
+            # the diahybrid plane has no slot grouping → no int8 scales
+            cands = ("bf16",) if format == "diahybrid" else ("int8", "bf16")
+            value_dtype = _auto_value_dtype(A, stats, candidates=cands)
         reg.counter("prepare", f"value_dtype.{value_dtype}")
     if format == "sellcs":
         with reg.timer("prepare", "phase.tile_build"):
@@ -460,8 +535,46 @@ def prepare(
             fingerprint=fingerprint,
             spmm_width=spmm_width,
         ))
+    if format in ("segsum", "diahybrid"):
+        ident_params = tuner_mod.TuningParams(
+            ssrs=1, srs=1, k=1, use_inner_parallel=True
+        )
+        if gather_chunk is not None:
+            ident_params = dataclasses.replace(
+                ident_params, gather_chunk=gather_chunk
+            )
+        with reg.timer("prepare", "phase.tile_build"):
+            if format == "segsum":
+                seg = segsum_from_csr(
+                    A, chunk_slots=segsum_chunk, value_dtype=value_dtype
+                )
+                dia = None
+            else:
+                seg = None
+                dia = diahybrid_from_csr(
+                    A, occupancy=diag_occupancy, value_dtype=value_dtype
+                )
+        return _record_prepared(PreparedSpMV(
+            csrk=None,
+            tiles=None,
+            perm=np.arange(A.m),
+            params=ident_params,
+            device=device,
+            gather_mode=gather_mode,
+            interpret=interpret,
+            backend=format,
+            segsum=seg,
+            dia=dia,
+            stats=stats,
+            value_dtype=value_dtype,
+            fingerprint=fingerprint,
+            spmm_width=spmm_width,
+        ))
     if format != "csrk":
-        raise ValueError(f"unknown format {format!r} (expected auto|csrk|sellcs)")
+        raise ValueError(
+            f"unknown format {format!r} "
+            "(expected auto|csrk|sellcs|segsum|diahybrid)"
+        )
 
     with reg.timer("prepare", "phase.reorder"):
         if reorder == "bandk":

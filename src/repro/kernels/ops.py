@@ -11,10 +11,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.sparse import CSRkTileBuckets, CSRkTiles, ELLMatrix, SELLCSTiles
+from repro.sparse import (
+    CSRkTileBuckets,
+    CSRkTiles,
+    DIAHybridMatrix,
+    ELLMatrix,
+    SegSumCSR,
+    SELLCSTiles,
+)
 from repro.kernels import ref
 from repro.kernels.spmv_csrk import spmv_csrk_tiles_pallas
+from repro.kernels.spmv_diahybrid import spmv_dia_pallas
 from repro.kernels.spmv_ell import spmv_ell_pallas
+from repro.kernels.spmv_segsum import spmv_segsum_pallas
 from repro.kernels.spmv_sellcs import spmv_sellcs_pallas
 from repro.obs import annotated
 
@@ -196,6 +205,88 @@ def spmv_sellcs(
     return out.at[tiles.row_perm].set(y_sorted)[:m]
 
 
+@annotated("repro.spmv_segsum", count_section="kernels")
+def spmv_segsum(
+    mat: SegSumCSR,
+    x: jax.Array,
+    *,
+    gather_mode: str = "onehot",
+    gather_chunk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Speculative segmented-sum SpMV: Pallas partials + the carry/patch pass.
+
+    The kernel emits [T · R] per-chunk speculative partials; the patch is a
+    single scatter-add through ``seg_row``, which sums the fragments of any
+    row spanning chunk boundaries (padding segments land in the dump row m
+    and are dropped).  ``x`` may be [n] or [n, B]; like SELL-C-σ, x is padded
+    against the column extent rounded to the 128-lane grid so the compiled
+    signature does not depend on the caller's vector.
+    """
+    m, n = mat.shape
+    n_pad = -(-max(n, x.shape[0]) // 128) * 128
+    xp = _pad_rows(x, n_pad)
+    partial = spmv_segsum_pallas(
+        mat.vals,
+        mat.col_idx,
+        mat.local_seg,
+        xp,
+        mat.val_scale,
+        segs_per_chunk=mat.segs_per_chunk,
+        gather_chunk=gather_chunk,
+        gather_mode=gather_mode,
+        interpret=interpret,
+    )
+    out = jnp.zeros((m + 1,) + partial.shape[1:], partial.dtype)
+    return out.at[mat.seg_row.reshape(-1)].add(partial)[:m]
+
+
+@annotated("repro.spmv_diahybrid", count_section="kernels")
+def spmv_diahybrid(
+    mat: DIAHybridMatrix,
+    x: jax.Array,
+    *,
+    row_tile: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Partially-diagonal hybrid SpMV: Pallas DIA plane + CSR-oracle remainder.
+
+    x is extended with the kernel's ``lead`` zero margin so every shifted
+    diagonal slice is in-range (off-matrix reads pair zero slot values with
+    zero margin reads — inert on both sides); the CSR remainder rides the
+    existing ``ref.spmv_csr`` / ``ref.spmm_csr`` path, added after the plane
+    in the same order the oracle uses.  ``x`` may be [n] or [n, B].
+    """
+    m, n = mat.shape
+    offs = mat.offsets
+    if not offs:
+        y = jnp.zeros((m,) + x.shape[1:], jnp.float32).astype(x.dtype)
+    else:
+        row_tile = min(row_tile, max(8, m))
+        m_pad = -(-m // row_tile) * row_tile
+        lead = max(0, -min(offs))
+        hi = max(max(offs), 0)
+        L = lead + max(m_pad + hi, n)
+        pad = [(lead, L - lead - n)] + [(0, 0)] * (x.ndim - 1)
+        x_ext = jnp.pad(x, pad).astype(jnp.float32)
+        plane = jnp.pad(mat.diag_vals, ((0, 0), (0, m_pad - m)))
+        y = spmv_dia_pallas(
+            plane,
+            x_ext,
+            offsets=offs,
+            lead=lead,
+            row_tile=row_tile,
+            interpret=interpret,
+        )[:m].astype(x.dtype)
+    if mat.remainder.nnz:
+        rem = (
+            ref.spmm_csr(mat.remainder, x) if x.ndim == 2
+            else ref.spmv_csr(mat.remainder, x)
+        )
+        y = y + rem.astype(y.dtype)
+    return y
+
+
 @annotated("repro.spmv_ell", count_section="kernels")
 def spmv_ell(mat: ELLMatrix, x: jax.Array, *, row_tile: int = 256, interpret: bool = True):
     """ELL SpMV via the Pallas baseline kernel (rows padded to the tile)."""
@@ -212,4 +303,6 @@ def spmv_ell(mat: ELLMatrix, x: jax.Array, *, row_tile: int = 256, interpret: bo
 spmv_csrk_ref = ref.spmv_csrk_tiles
 spmv_ell_ref = ref.spmv_ell
 spmv_sellcs_ref = ref.spmv_sellcs
+spmv_segsum_ref = ref.spmv_segsum
+spmv_diahybrid_ref = ref.spmv_diahybrid
 spmm_csr_ref = ref.spmm_csr

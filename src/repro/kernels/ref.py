@@ -16,7 +16,9 @@ from repro.sparse import (
     CSRkMatrix,
     CSRkTileBuckets,
     CSRkTiles,
+    DIAHybridMatrix,
     ELLMatrix,
+    SegSumCSR,
     SELLCSMatrix,
     SELLCSTiles,
 )
@@ -205,6 +207,82 @@ def spmv_sellcs(mat: SELLCSMatrix, x: jax.Array) -> jax.Array:
     )
     out = jnp.zeros((m + 1,), contrib.dtype)
     return out.at[mat.row_perm].set(y_sorted)[:m]
+
+
+@annotated("repro.oracle.spmv_segsum", count_section="oracles")
+def spmv_segsum(mat: SegSumCSR, x: jax.Array) -> jax.Array:
+    """Speculative segmented-sum oracle (value-dtype aware).
+
+    Per chunk t: the slot contributions are segment-summed by local segment
+    id into [T, R] speculative partials — exactly what the Pallas kernel
+    emits — then the carry/patch pass scatter-adds every partial to its
+    segment's global row, summing the fragments of rows that span chunks
+    (padding segments land in the dump row m and are dropped).  ``x`` may
+    carry a trailing batch dimension ([n, B] → [m, B]).
+    """
+    m = mat.shape[0]
+    T, S = mat.vals.shape
+    R = mat.segs_per_chunk
+    vals = _tile_vals_f32(mat.vals, mat.val_scale).astype(x.dtype)
+    seg = mat.local_seg + (jnp.arange(T, dtype=jnp.int32) * R)[:, None]
+    rows = mat.seg_row.reshape(-1)
+    if x.ndim == 2:
+        contrib = vals[..., None] * x[mat.col_idx]         # [T, S, B]
+        partial = jax.ops.segment_sum(
+            contrib.reshape(T * S, -1), seg.reshape(-1), num_segments=T * R
+        )
+        out = jnp.zeros((m + 1, x.shape[1]), partial.dtype)
+        return out.at[rows].add(partial)[:m]
+    contrib = vals * x[mat.col_idx]                        # [T, S]
+    partial = jax.ops.segment_sum(
+        contrib.reshape(-1), seg.reshape(-1), num_segments=T * R
+    )
+    out = jnp.zeros((m + 1,), partial.dtype)
+    return out.at[rows].add(partial)[:m]
+
+
+def _dia_plane(mat: DIAHybridMatrix, x: jax.Array) -> jax.Array:
+    """DIA-plane partial y, mirroring the Pallas kernel's float ops exactly.
+
+    x is extended with the same ``lead`` zero margin the kernel wrapper
+    builds; per-slot f32 products are reduced over the diagonal axis with
+    the same ``jnp.sum`` the kernel uses — so kernel == oracle holds bitwise
+    (off-matrix reads pair a zero slot value with a zero margin read on both
+    sides, and the axis reduction lowers to the same pairwise tree eager and
+    jitted, unlike an FMA chain or a ones-vector dot).
+    """
+    m, n = mat.shape
+    offs = mat.offsets
+    if not offs:
+        return jnp.zeros((m,) + x.shape[1:], jnp.float32).astype(x.dtype)
+    lead = max(0, -min(offs))
+    hi = max(max(offs), 0)
+    L = lead + max(m + hi, n)
+    pad = [(lead, L - lead - n)] + [(0, 0)] * (x.ndim - 1)
+    x_ext = jnp.pad(x, pad).astype(jnp.float32)
+    xs = jnp.stack([x_ext[off + lead : off + lead + m] for off in offs])
+    vals = mat.diag_vals.astype(jnp.float32)
+    if x.ndim == 2:
+        contrib = vals[..., None] * xs                     # [n_diag, m, B]
+    else:
+        contrib = vals * xs                                # [n_diag, m]
+    return jnp.sum(contrib, axis=0).astype(x.dtype)
+
+
+@annotated("repro.oracle.spmv_diahybrid", count_section="oracles")
+def spmv_diahybrid(mat: DIAHybridMatrix, x: jax.Array) -> jax.Array:
+    """Partially-diagonal hybrid oracle: shifted-slice DIA contraction plus
+    the CSR remainder through the canonical CSR oracle — the same two-part
+    sum the kernel wrapper performs, in the same order.  ``x`` may carry a
+    trailing batch dimension ([n, B] → [m, B])."""
+    y = _dia_plane(mat, x)
+    if mat.remainder.nnz:
+        rem = (
+            spmm_csr(mat.remainder, x) if x.ndim == 2
+            else spmv_csr(mat.remainder, x)
+        )
+        y = y + rem.astype(y.dtype)
+    return y
 
 
 @annotated("repro.oracle.spmm_csr", count_section="oracles")

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel for the DIA plane of the partially-diagonal hybrid.
+
+Mapping:
+  * one row block      → one grid step ([n_diag, row_tile] value block)
+  * x[col] per diagonal → a statically-unrolled shifted contiguous slice of
+    x (col = row + offset, so a diagonal's x reads are unit-stride — no
+    gather at all, the whole point of extracting dense diagonals)
+  * accumulation       → per-slot f32 products, reduced over the diagonal
+    axis with ``jnp.sum`` — the one formulation that is bit-reproducible
+    between the jitted kernel and the eager oracle: an explicit FMA chain
+    gets single-rounding-fused under jit, and a ones-vector ``dot`` is
+    rewritten by XLA's dot-strength-reduction, but a plain axis reduction
+    lowers to the same pairwise tree in both contexts
+
+x arrives extended with a ``lead = max(0, −min_offset)`` zero margin on the
+left and a zero margin on the right, so every shifted slice is in-range and
+off-matrix reads are inert zeros (matching the container's zeroed plane).
+The CSR remainder is NOT handled here — ops.py adds it through the existing
+``ref.spmv_csr`` oracle path after the launch, per the hybrid's design.
+
+Unlike SELL-C-σ / segsum, each grid step only reads a ``row_tile``-sized
+x window per diagonal, so VMEM pressure is O(n_diag · row_tile), not O(n) —
+diagonal structure restores the locality that Band-k windows give CSR-k.
+
+Validated in ``interpret=True`` mode against ``ref.spmv_diahybrid``
+(tests/test_irregular_formats.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(
+    diag_ref,  # [n_diag, RT]
+    x_ref,     # [L] extended x
+    y_ref,     # [RT]
+    *,
+    offsets: Tuple[int, ...],
+    lead: int,
+    row_tile: int,
+):
+    i0 = pl.program_id(0) * row_tile
+    x = x_ref[...]
+    xs = jnp.stack([                          # static unroll: one slice/diag
+        jax.lax.dynamic_slice(x, (i0 + off + lead,), (row_tile,))
+        for off in offsets
+    ])                                                       # [n_diag, RT]
+    contrib = diag_ref[...].astype(jnp.float32) * xs.astype(jnp.float32)
+    y_ref[...] = jnp.sum(contrib, axis=0).astype(y_ref.dtype)   # [RT]
+
+
+def _kernel_batched(
+    diag_ref,  # [n_diag, RT]
+    x_ref,     # [L, B] extended x block
+    y_ref,     # [RT, B]
+    *,
+    offsets: Tuple[int, ...],
+    lead: int,
+    row_tile: int,
+):
+    """SpMM variant: the diagonal value block (the bandwidth-bound side) is
+    read once for all B right-hand sides."""
+    i0 = pl.program_id(0) * row_tile
+    x = x_ref[...]
+    B = x.shape[1]
+    xs = jnp.stack([
+        jax.lax.dynamic_slice(x, (i0 + off + lead, 0), (row_tile, B))
+        for off in offsets
+    ])                                                       # [n_diag, RT, B]
+    contrib = diag_ref[...].astype(jnp.float32)[..., None] * xs.astype(
+        jnp.float32
+    )
+    y_ref[...] = jnp.sum(contrib, axis=0).astype(y_ref.dtype)   # [RT, B]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("offsets", "lead", "row_tile", "interpret")
+)
+def spmv_dia_pallas(
+    diag_vals: jax.Array,  # [n_diag, m_pad] f32 | bf16
+    x_ext: jax.Array,      # [L] or [L, B] extended x (lead margin + right pad)
+    *,
+    offsets: Tuple[int, ...],
+    lead: int,
+    row_tile: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Run the DIA-plane kernel over all row blocks.
+
+    Args:
+      diag_vals: [n_diag, m_pad] plane, rows padded to a ``row_tile``
+        multiple (padding rows are zero → inert).
+      x_ext: extended x from ops.py: ``lead`` zeros, then x, zero-padded on
+        the right so every ``i0 + off + lead`` slice is in-range.
+      offsets / lead / row_tile: static geometry (offsets ascending).
+
+    Returns:
+      The DIA-plane partial y of [m_pad] (resp. [m_pad, B]); the caller
+      truncates to m and adds the CSR remainder.
+    """
+    n_diag, m_pad = diag_vals.shape
+    T = m_pad // row_tile
+    L = x_ext.shape[0]
+    if x_ext.ndim == 2:
+        B = x_ext.shape[1]
+        kernel = functools.partial(
+            _kernel_batched, offsets=offsets, lead=lead, row_tile=row_tile
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=(T,),
+            in_specs=[
+                pl.BlockSpec((n_diag, row_tile), lambda t: (0, t)),
+                pl.BlockSpec((L, B), lambda t: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((row_tile, B), lambda t: (t, 0)),
+            out_shape=jax.ShapeDtypeStruct((m_pad, B), x_ext.dtype),
+            interpret=interpret,
+        )(diag_vals, x_ext)
+    kernel = functools.partial(
+        _kernel, offsets=offsets, lead=lead, row_tile=row_tile
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((n_diag, row_tile), lambda t: (0, t)),
+            pl.BlockSpec((L,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((row_tile,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((m_pad,), x_ext.dtype),
+        interpret=interpret,
+    )(diag_vals, x_ext)

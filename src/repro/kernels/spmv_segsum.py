@@ -1,0 +1,171 @@
+"""Pallas TPU kernel for speculative segmented-sum CSR SpMV.
+
+Mapping, following the SELL-C-σ kernel's idiom (spmv_sellcs.py):
+  * one nnz chunk     → one grid step ([1, S] value/col/segment streams)
+  * x[col_idx] gather → chunked one-hot matmuls on the MXU (gather.py)
+  * per-segment sum   → the CSR-k kernel's one-hot segmented reduce
+    (spmv_csrk._reduce_onehot), [S] slots → [R] speculative partials
+
+The kernel is *speculative* in Liu & Vinter's sense: each chunk reduces its
+slots by local segment id without knowing whether a segment is a whole row
+or a fragment of one.  The cheap patch happens outside the launch (ops.py):
+one scatter-add of the ``[T · R]`` partials through ``seg_row`` sums every
+row's fragments, however many chunks it spans.  No per-row padding exists
+anywhere, so the launch cost is O(nnz) even for empty-row / power-law
+matrices — the regime where SELL-C-σ's per-chunk width padding explodes.
+
+Like SELL-C-σ there is no banded-window guarantee, so each grid step sees
+the whole (padded) x in VMEM; the registry routes accordingly.
+
+Validated in ``interpret=True`` mode against ``ref.spmv_segsum``
+(tests/test_irregular_formats.py sweeps the adversarial families and dtypes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gather import gather_onehot
+from repro.kernels.spmv_csrk import _dequant_slots, _reduce_onehot
+
+
+def _kernel(
+    vals_ref,   # [1, S]
+    col_ref,    # [1, S]
+    lseg_ref,   # [1, S]
+    *rest,      # ([scale_ref,] x_ref [n_pad], y_ref [R])
+    segs_per_chunk: int,
+    gather_chunk: int,
+    gather_mode: str,
+):
+    scale_ref = rest[0] if len(rest) == 3 else None
+    x_ref, y_ref = rest[-2:]
+    v = _dequant_slots(vals_ref[0], scale_ref)                     # [S]
+    cols = col_ref[0]
+    x = x_ref[...]                                                 # [n_pad]
+    if gather_mode == "take":
+        gathered = jnp.take(x, cols, axis=0).astype(jnp.float32)
+    else:
+        gathered = gather_onehot(x, cols, gather_chunk)
+    contrib = v * gathered                                         # [S]
+    y = _reduce_onehot(contrib, lseg_ref[0], segs_per_chunk)       # [R]
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def _kernel_batched(
+    vals_ref,   # [1, S]
+    col_ref,    # [1, S]
+    lseg_ref,   # [1, S]
+    *rest,      # ([scale_ref,] x_ref [n_pad, B], y_ref [R, B])
+    segs_per_chunk: int,
+    gather_chunk: int,
+    gather_mode: str,
+):
+    """SpMM variant: x carries a trailing batch dimension; the chunk's
+    slot streams (the bandwidth-bound side) are read once for all B.
+
+    The segmented reduce runs once per column as the *vector* one-hot
+    matvec rather than a single [R, S] × [S, B] matmul: XLA's contraction
+    schedule for the 2-D product varies with (R, B) and drifts final-ulp
+    bits away from the oracle's segment-sum, while the matvec form lowers
+    to the same reduction tree — the kernel==oracle bit-exactness contract
+    (tests/test_irregular_formats.py) holds per column, so it must hold
+    for the stack."""
+    scale_ref = rest[0] if len(rest) == 3 else None
+    x_ref, y_ref = rest[-2:]
+    v = _dequant_slots(vals_ref[0], scale_ref)                     # [S]
+    cols = col_ref[0]
+    x = x_ref[...]                                                 # [n_pad, B]
+    if gather_mode == "take":
+        gathered = jnp.take(x, cols, axis=0).astype(jnp.float32)   # [S, B]
+    else:
+        gathered = gather_onehot(x, cols, gather_chunk)            # [S, B]
+    contrib = v[:, None] * gathered                                # [S, B]
+    y = jnp.stack(
+        [
+            _reduce_onehot(contrib[:, b], lseg_ref[0], segs_per_chunk)
+            for b in range(contrib.shape[1])
+        ],
+        axis=1,
+    )                                                              # [R, B]
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("segs_per_chunk", "gather_chunk", "gather_mode", "interpret"),
+)
+def spmv_segsum_pallas(
+    vals: jax.Array,      # [T, S]
+    col_idx: jax.Array,   # [T, S]
+    local_seg: jax.Array, # [T, S]
+    x_padded: jax.Array,  # [n_pad] or [n_pad, B] — padded to a 128 multiple
+    val_scale: jax.Array | None = None,  # [T, S/group] f32, int8 values only
+    *,
+    segs_per_chunk: int,
+    gather_chunk: int = 512,
+    gather_mode: str = "onehot",
+    interpret: bool = True,
+) -> jax.Array:
+    """Run the segmented-sum kernel over all chunks.
+
+    Args:
+      vals / col_idx / local_seg: [T, S] equal-size chunk streams from
+        :class:`repro.sparse.segsum.SegSumCSR` (tail padding slots carry
+        val 0 and are inert).  ``vals`` may be f32, bf16, or int8; int8
+        requires ``val_scale`` (per-group f32 scales, dequantized in-kernel
+        with f32 accumulation).
+      x_padded: [n_pad] vector or [n_pad, B] block, padded to a 128 multiple
+        by ops.py.
+      segs_per_chunk: R, static from the container.
+
+    Returns:
+      Speculative partials of [T · R] (resp. [T · R, B]) in (chunk, local
+      segment) order.  The caller MUST apply the carry/patch pass — a
+      scatter-add through ``seg_row`` (see :func:`repro.kernels.ops.
+      spmv_segsum`) — to obtain y; partials of rows spanning chunks are not
+      yet summed here.  The vector path is unchanged from the single-RHS
+      kernel (bit-for-bit).
+    """
+    T, S = vals.shape
+    n_pad = x_padded.shape[0]
+    R = segs_per_chunk
+    in_specs = [
+        pl.BlockSpec((1, S), lambda t: (t, 0)),
+        pl.BlockSpec((1, S), lambda t: (t, 0)),
+        pl.BlockSpec((1, S), lambda t: (t, 0)),
+    ]
+    operands = [vals, col_idx, local_seg]
+    if val_scale is not None:
+        G = val_scale.shape[1]
+        in_specs.append(pl.BlockSpec((1, G), lambda t: (t, 0)))
+        operands.append(val_scale)
+    if x_padded.ndim == 2:
+        B = x_padded.shape[1]
+        kernel = functools.partial(
+            _kernel_batched, segs_per_chunk=R,
+            gather_chunk=gather_chunk, gather_mode=gather_mode,
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=(T,),
+            in_specs=in_specs + [pl.BlockSpec((n_pad, B), lambda t: (0, 0))],
+            out_specs=pl.BlockSpec((R, B), lambda t: (t, 0)),
+            out_shape=jax.ShapeDtypeStruct((T * R, B), x_padded.dtype),
+            interpret=interpret,
+        )(*operands, x_padded)
+    kernel = functools.partial(
+        _kernel, segs_per_chunk=R,
+        gather_chunk=gather_chunk, gather_mode=gather_mode,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(T,),
+        in_specs=in_specs + [pl.BlockSpec((n_pad,), lambda t: (0,))],
+        out_specs=pl.BlockSpec((R,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((T * R,), x_padded.dtype),
+        interpret=interpret,
+    )(*operands, x_padded)

@@ -6,6 +6,8 @@ everything here for back-compat).  Layout:
 * :mod:`repro.sparse.coo` / :mod:`repro.sparse.csr` — interchange formats
 * :mod:`repro.sparse.csrk` — the paper's CSR-k + its TPU tile view
 * :mod:`repro.sparse.sellcs` — SELL-C-σ for irregular matrices
+* :mod:`repro.sparse.segsum` — speculative segmented-sum CSR (power-law path)
+* :mod:`repro.sparse.diahybrid` — DIA + CSR remainder (stencil path)
 * :mod:`repro.sparse.baselines` — ELL / BCSR / CSR5-like comparison formats
 * :mod:`repro.sparse.stats` — one-pass matrix statistics
 * :mod:`repro.sparse.registry` — O(1) ``select_format`` dispatch
@@ -34,8 +36,17 @@ from repro.sparse.sellcs import (  # noqa: F401
     sellcs_from_csr,
     tiles_from_sellcs,
 )
+from repro.sparse.segsum import SegSumCSR, segsum_from_csr  # noqa: F401
+from repro.sparse.diahybrid import (  # noqa: F401
+    DIAHybridMatrix,
+    dense_diagonals,
+    diahybrid_from_csr,
+)
 from repro.sparse.stats import (  # noqa: F401
+    DIA_FRACTION_MIN,
+    DIAG_OCCUPANCY,
     REGULAR_ROW_VAR_MAX,
+    SEGSUM_ROW_SKEW_MIN,
     MatrixStats,
     classify_tile_reach,
     compute_shard_stats,

@@ -1,0 +1,197 @@
+"""Partially-diagonal hybrid: dense diagonals as DIA + a CSR remainder.
+
+Fukaya et al. (arXiv:2105.04937) observe that the finite-difference and
+finite-element matrices the source paper targets concentrate nearly all nnz
+on a handful of *dense* diagonals; storing those as a DIA plane turns most of
+the SpMV into a shifted dense contraction — unit-stride value reads, no
+column indices at all — while the leftover nnz (boundary fringes, irregular
+couplings) stay in a small CSR remainder served by the existing oracle path.
+
+:class:`DIAHybridMatrix` keeps the diagonal plane as ``diag_vals[n_diag, m]``
+with ``diag_vals[k, i] = A[i, i + offsets[k]]`` (row-major per diagonal, the
+layout the Pallas kernel streams in row blocks); ``offsets`` is static
+metadata so the kernel can unroll one shifted x-slice per diagonal.
+:func:`dense_diagonals` is the extraction policy — a diagonal qualifies when
+it fills at least an ``occupancy`` fraction of the ``m`` plane slots its row
+would cost (so short corner diagonals can never pay for a full plane row),
+the same census :func:`repro.sparse.stats.compute_stats` uses for
+``diag_fraction``, so the O(1) routing decision and the container agree on
+what "diagonal enough" means.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+from repro.sparse.stats import DIAG_OCCUPANCY
+
+Array = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DIAHybridMatrix:
+    """Dense-diagonal DIA plane + CSR remainder (arXiv:2105.04937 style).
+
+    ``diag_vals[k, i]`` holds ``A[i, i + offsets[k]]`` (0 where the diagonal
+    runs off the matrix or the entry is absent); ``remainder`` carries every
+    nnz not on a dense diagonal and always stays f32 — only the regular,
+    index-free plane is worth compressing to bf16.
+    """
+
+    diag_vals: Array            # [n_diag, m] f32 | bf16
+    offsets: Tuple[int, ...]    # static, ascending; diag k is col = row + off
+    remainder: CSRMatrix        # off-diagonal nnz, f32
+    shape: Tuple[int, int]
+    diag_nnz: int = 0           # real nnz captured by the plane
+    value_dtype: str = "f32"    # dtype of diag_vals ("f32" | "bf16")
+
+    def tree_flatten(self):
+        return (
+            (self.diag_vals, self.remainder),
+            (self.offsets, self.shape, self.diag_nnz, self.value_dtype),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], children[1], aux[1],
+                   diag_nnz=aux[2], value_dtype=aux[3])
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    @property
+    def n_diag(self) -> int:
+        return int(self.diag_vals.shape[0])
+
+    @property
+    def nnz(self) -> int:
+        return self.diag_nnz + self.remainder.nnz
+
+    def padding_overhead(self) -> float:
+        """Stored-but-absent slot fraction of the DIA plane: bounded by
+        ``n_diag · m / diag_nnz − 1 ≤ 1/occupancy − 1`` by construction."""
+        real = float(max(self.nnz, 1))
+        return (self.n_diag * self.m + self.remainder.nnz - self.nnz) / real
+
+    def overhead_bytes(self) -> int:
+        """Index metadata bytes: the remainder's CSR streams (the DIA plane
+        needs no per-entry indices — its defining advantage)."""
+        return self.remainder.nnz * 4 + (self.m + 1) * 4
+
+    def modeled_bytes(self) -> int:
+        """Modeled per-SpMV HBM traffic.
+
+        The plane streams ``n_diag · m`` values plus one shifted x read per
+        diagonal slot and one y write per row; the remainder pays the usual
+        CSR toll (val + col index + x gather per nnz, row_ptr stream).
+        """
+        from repro.sparse.csrk import VALUE_BYTES
+
+        vb = VALUE_BYTES[self.value_dtype]
+        plane = self.n_diag * self.m * (vb + 4) + self.m * 4
+        rem = self.remainder.nnz * 12 + (self.m + 1) * 4
+        return plane + rem
+
+    def todense(self) -> Array:
+        m, n = self.shape
+        out = jnp.zeros((m, n), jnp.float32)
+        rows = jnp.arange(m)
+        vals = self.diag_vals.astype(jnp.float32)
+        for k, off in enumerate(self.offsets):
+            cols = jnp.clip(rows + off, 0, n - 1)
+            keep = (rows + off >= 0) & (rows + off < n)
+            out = out.at[rows, cols].add(jnp.where(keep, vals[k], 0.0))
+        return out + self.remainder.todense().astype(jnp.float32)
+
+
+def dense_diagonals(
+    csr: CSRMatrix, occupancy: float = DIAG_OCCUPANCY
+) -> np.ndarray:
+    """Offsets of the diagonals dense enough to earn a DIA plane row.
+
+    Occupancy is nnz-on-diagonal / ``m`` — the number of slots a plane row
+    costs — so short corner diagonals (which could be 100% occupied over a
+    handful of entries) never qualify.  Identical to the census behind
+    ``MatrixStats.diag_fraction``, so the set returned here is exactly the
+    nnz that ``diag_fraction`` counted.  Host-side, O(nnz+m+n).
+    """
+    m, n = csr.shape
+    rp = np.asarray(csr.row_ptr)
+    ci = np.asarray(csr.col_idx).astype(np.int64)
+    lengths = (rp[1:] - rp[:-1]).astype(np.int64)
+    if not int(rp[-1]):
+        return np.zeros((0,), np.int64)
+    offs = ci - np.repeat(np.arange(m, dtype=np.int64), lengths)
+    counts = np.bincount(offs + (m - 1), minlength=m + n - 1)
+    off_vals = np.arange(-(m - 1), n, dtype=np.int64)
+    dense = (counts > 0) & (counts >= occupancy * max(m, 1))
+    return off_vals[dense]
+
+
+def diahybrid_from_csr(
+    csr: CSRMatrix,
+    occupancy: float = DIAG_OCCUPANCY,
+    value_dtype: str = "f32",
+) -> DIAHybridMatrix:
+    """Split CSR into a dense-diagonal DIA plane + CSR remainder (host-side).
+
+    Args:
+      csr: the source matrix.
+      occupancy: extraction threshold for :func:`dense_diagonals`.
+      value_dtype: "f32" | "bf16" storage for the DIA plane.  int8 is
+        rejected: the plane has no slot grouping to hang grouped scales on,
+        and the remainder path always runs f32 anyway.
+    """
+    if value_dtype not in ("f32", "bf16"):
+        raise ValueError(
+            f"diahybrid supports value_dtype f32|bf16, got {value_dtype!r}"
+        )
+    m, n = csr.shape
+    rp = np.asarray(csr.row_ptr)
+    ci = np.asarray(csr.col_idx).astype(np.int64)
+    vl = np.asarray(csr.vals, np.float32)
+    lengths = (rp[1:] - rp[:-1]).astype(np.int64)
+    rows = np.repeat(np.arange(m, dtype=np.int64), lengths)
+    offs = ci - rows
+
+    offsets = dense_diagonals(csr, occupancy)
+    diag_id = np.full(m + n - 1, -1, np.int64)
+    diag_id[offsets + (m - 1)] = np.arange(offsets.size)
+    k_of = diag_id[offs + (m - 1)]
+    on_diag = k_of >= 0
+
+    diag_vals = np.zeros((offsets.size, m), np.float32)
+    diag_vals[k_of[on_diag], rows[on_diag]] = vl[on_diag]
+
+    rem_rows = rows[~on_diag]
+    rem_rp = np.zeros(m + 1, np.int32)
+    np.add.at(rem_rp, rem_rows + 1, 1)
+    np.cumsum(rem_rp, out=rem_rp)
+    remainder = CSRMatrix(
+        jnp.asarray(rem_rp),
+        jnp.asarray(ci[~on_diag].astype(np.int32)),
+        jnp.asarray(vl[~on_diag]),
+        (m, n),
+    )
+    plane = jnp.asarray(
+        diag_vals, jnp.bfloat16 if value_dtype == "bf16" else jnp.float32
+    )
+    return DIAHybridMatrix(
+        plane,
+        tuple(int(o) for o in offsets),
+        remainder,
+        (m, n),
+        diag_nnz=int(on_diag.sum()),
+        value_dtype=value_dtype,
+    )

@@ -9,26 +9,41 @@ first match in priority order.  Selection never touches the matrix data —
 only the stats — so it stays O(1), in the same spirit as the paper's
 constant-time tuner.
 
-Built-in policy (the acceptance rule of record):
+Built-in policy (the acceptance rule of record; higher priority wins):
 
 =================  =========================================  ==============
 format             matches                                    role
 =================  =========================================  ==============
+``diahybrid``      ``diag_fraction ≥ 0.9`` and                DIA + CSR
+                   ``row_var > 10``                           remainder
+``segsum``         ``row_var > 10`` and ``row_skew ≥ 16``      segmented-sum
+                                                              CSR path
 ``sellcs``         ``row_var > 10`` (irregular, Sec. 6)       SELL-C-σ path
 ``csrk``           always (fallback)                          paper's path
 =================  =========================================  ==============
 
+Regular matrices (``row_var ≤ 10``) always keep CSR-k — the two irregular
+specialists only outrank SELL-C-σ when their own signal is present
+(near-total dense-diagonal coverage, resp. power-law row skew), so every
+matrix routed before they existed routes identically today.
+
 Baseline formats (``ell``, ``bcsr``, ``csr5``) are registered non-selectable:
 they stay addressable through the registry (benchmarks look them up by name
 and run their converters/oracles directly), but the auto-selector never picks
-them and ``prepare`` only executes the ``csrk``/``sellcs`` backends.
+them; ``prepare`` executes the ``csrk``/``sellcs``/``segsum``/``diahybrid``
+backends.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
-from repro.sparse.stats import REGULAR_ROW_VAR_MAX, MatrixStats
+from repro.sparse.stats import (
+    DIA_FRACTION_MIN,
+    REGULAR_ROW_VAR_MAX,
+    SEGSUM_ROW_SKEW_MIN,
+    MatrixStats,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +131,38 @@ def select_format(stats: MatrixStats, device: str = "tpu_v5e") -> str:
 # -- built-in registrations --------------------------------------------------
 
 register_format(FormatSpec(
+    name="diahybrid",
+    description=(
+        "Partially-diagonal hybrid (Fukaya et al., arXiv:2105.04937): dense "
+        "diagonals as a DIA plane + CSR remainder — the stencil-matrix path"
+    ),
+    # Nearly all nnz on dense diagonals AND irregular enough that CSR-k
+    # would not keep the matrix anyway: regular banded suite matrices
+    # (diag_fraction == 1.0, row_var ≤ 10) must keep csrk bit-for-bit.
+    matches=lambda stats, device: (
+        stats.diag_fraction >= DIA_FRACTION_MIN
+        and stats.row_var > REGULAR_ROW_VAR_MAX
+    ),
+    priority=30,
+))
+
+register_format(FormatSpec(
+    name="segsum",
+    description=(
+        "Speculative segmented-sum CSR (Liu & Vinter, arXiv:1504.06474): "
+        "equal-nnz chunks + carry patch — the power-law/empty-row path"
+    ),
+    # Irregular AND power-law-skewed: the suite's irregular FEM matrices
+    # (skew ≈ 1.1) keep SELL-C-σ; only a genuine heavy tail (skew ≥ 16)
+    # justifies giving up SELL's per-chunk row locality.
+    matches=lambda stats, device: (
+        stats.row_var > REGULAR_ROW_VAR_MAX
+        and stats.row_skew >= SEGSUM_ROW_SKEW_MIN
+    ),
+    priority=20,
+))
+
+register_format(FormatSpec(
     name="sellcs",
     description=(
         "SELL-C-σ (Kreutzer et al.): σ-sorted C-row chunks, per-chunk "
@@ -139,7 +186,8 @@ register_format(FormatSpec(
 for _name, _desc in (
     ("ell", "ELLPACK baseline (paper Sec. 2.3) — global max-row padding"),
     ("bcsr", "Block CSR baseline (paper Sec. 2.1)"),
-    ("csr5", "CSR5-like competitor stand-in (paper Sec. 2.4)"),
+    ("csr5", "CSR5-like competitor stand-in (paper Sec. 2.4); its executable "
+             "successor is the selectable ``segsum`` backend"),
 ):
     register_format(FormatSpec(
         name=_name, description=_desc,

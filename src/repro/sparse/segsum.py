@@ -1,0 +1,216 @@
+"""Speculative segmented-sum CSR: the power-law / empty-row path.
+
+Liu & Vinter (CSR5, arXiv:1504.06474) make the case that ultra-irregular
+matrices want an nnz-space partition: split the nnz stream into equal-size
+chunks **independent of row boundaries**, compute per-chunk partial sums
+speculatively (each chunk reduces its slots by the row segments it happens to
+contain), and patch rows that span chunks with a cheap carry pass that adds
+the partial head/tail sums together.  Storage and work are both O(nnz) — no
+per-row padding of any kind, so empty rows are free and a single million-nnz
+row costs exactly its nnz.  This is the regime where even SELL-C-σ pads
+badly: per-chunk padding still scales with the *local* row-length spread,
+which a Zipf tail makes arbitrarily bad.
+
+:class:`SegSumCSR` is both the canonical container and the Pallas view:
+
+* ``vals`` / ``col_idx`` — the CSR nnz streams, reshaped to ``[T, S]`` equal
+  chunks of ``S`` slots (the tail chunk zero-padded; padding slots carry
+  ``val == 0`` so they are numerically inert),
+* ``local_seg`` — each slot's *local segment id* inside its chunk (segments
+  are the distinct rows intersecting the chunk, in row order),
+* ``seg_row`` — ``[T, R]`` global row of each local segment (unused segments
+  point at the dump row ``m``).
+
+The kernel reduces each chunk to ``R`` speculative partials; the carry/patch
+pass is one scatter-add of ``seg_row`` → y, which sums the partials of every
+row that spans a chunk boundary (``tests/test_irregular_formats.py`` pins a
+hand-computed row spanning three chunks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.csr import CSRMatrix
+
+Array = Any
+
+_INT = jnp.int32
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SegSumCSR:
+    """Equal-nnz-chunk CSR with per-chunk speculative segment structure.
+
+    ``local_seg[t, s]`` ∈ [0, R) names the segment (distinct row) slot ``s``
+    contributes to inside chunk ``t``; ``seg_row[t, k]`` is that segment's
+    global row (``m`` = dump for unused segments and for the tail chunk's
+    padding slots, which form their own inert trailing segment).
+    """
+
+    vals: Array       # [T, S] f32 | bf16 | int8 — equal-size nnz chunks
+    col_idx: Array    # [T, S] int32 (padding → 0)
+    local_seg: Array  # [T, S] int32 in [0, R)
+    seg_row: Array    # [T, R] int32 global row per segment (unused → m)
+    shape: Tuple[int, int]
+    nnz_real: int = 0
+    val_scale: Any = None      # [T, S/INT8_GROUP] f32, int8 path only
+    value_dtype: str = "f32"
+
+    def tree_flatten(self):
+        return (
+            (self.vals, self.col_idx, self.local_seg, self.seg_row,
+             self.val_scale),
+            (self.shape, self.nnz_real, self.value_dtype),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children[:4], shape=aux[0], nnz_real=aux[1],
+                   val_scale=children[4], value_dtype=aux[2])
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def chunk_slots(self) -> int:
+        return int(self.vals.shape[1])
+
+    @property
+    def segs_per_chunk(self) -> int:
+        return int(self.seg_row.shape[1])
+
+    @property
+    def slots(self) -> int:
+        return self.num_chunks * self.chunk_slots
+
+    @property
+    def nnz(self) -> int:
+        return self.nnz_real
+
+    def padding_overhead(self) -> float:
+        """Padded-slot fraction: only the tail chunk pads, so this is < S/nnz
+        — the O(nnz) storage claim, independent of the row-length spread."""
+        real = float(max(self.nnz_real, 1))
+        return (self.slots - self.nnz_real) / real
+
+    def overhead_bytes(self) -> int:
+        """Metadata bytes beyond the slot arrays: local_seg + seg_row."""
+        return (self.slots + self.num_chunks * self.segs_per_chunk) * 4
+
+    def col_reach(self):
+        """Per-chunk real column reach ``(lo, hi)`` (host-side, numpy)."""
+        v = np.asarray(self.vals).reshape(self.num_chunks, -1)
+        c = np.asarray(self.col_idx).astype(np.int64)
+        mask = v != 0
+        lo = np.where(mask, c, np.iinfo(np.int32).max).min(
+            axis=1, initial=np.iinfo(np.int32).max
+        )
+        hi = np.where(mask, c, -1).max(axis=1, initial=-1)
+        return lo, hi
+
+    def modeled_bytes(self) -> int:
+        """Modeled per-SpMV HBM traffic of the Pallas launch.
+
+        Each chunk streams ``S`` value + col slots + local segment ids, reads
+        ``S`` gathered x elements, and writes ``R`` speculative partials that
+        the carry pass re-reads (+ the seg_row ids); int8 adds the per-group
+        scales.  Everything is O(nnz) — the format's defining property.
+        """
+        from repro.sparse.csrk import VALUE_BYTES, INT8_GROUP
+
+        vb = VALUE_BYTES[self.value_dtype]
+        per_chunk = self.chunk_slots * (vb + 12) + self.segs_per_chunk * 12
+        if self.val_scale is not None:
+            per_chunk += (self.chunk_slots // INT8_GROUP) * 4
+        return self.num_chunks * per_chunk + self.m * 4
+
+    def todense(self) -> Array:
+        """Dense reconstruction via the slot arrays (round-trip tests)."""
+        m, n = self.shape
+        from repro.kernels.ref import _tile_vals_f32
+
+        vals = _tile_vals_f32(jnp.asarray(self.vals), self.val_scale)
+        rows = jnp.asarray(self.seg_row)[
+            jnp.arange(self.num_chunks)[:, None], self.local_seg
+        ]
+        out = jnp.zeros((m + 1, n), jnp.float32)
+        out = out.at[rows.reshape(-1), self.col_idx.reshape(-1)].add(
+            vals.reshape(-1)
+        )
+        return out[:m]
+
+
+def segsum_from_csr(
+    csr: CSRMatrix, chunk_slots: int = 512, value_dtype: str = "f32"
+) -> SegSumCSR:
+    """Build the segmented-sum view from CSR (host-side numpy: setup phase).
+
+    The nnz stream is cut into ``ceil(nnz / chunk_slots)`` equal chunks with
+    no regard for row boundaries; each chunk's slots are labelled with a
+    local segment id (distinct rows in the chunk, in order), and ``seg_row``
+    records which global row every segment belongs to.  ``R`` (segments per
+    chunk) is the maximum over chunks, rounded up to the 8-sublane grid —
+    the only padding in the format, bounded by ``chunk_slots``.
+
+    Args:
+      csr: the source matrix.
+      chunk_slots: nnz slots per chunk; rounded up to a 128-lane multiple.
+      value_dtype: "f32" | "bf16" | "int8" slot-value compression (the same
+        grouped-scale idiom as :func:`repro.sparse.csrk.tiles_from_csrk`).
+    """
+    m, n = csr.shape
+    S = _round_up(max(int(chunk_slots), 128), 128)
+    rp = np.asarray(csr.row_ptr)
+    ci = np.asarray(csr.col_idx)
+    vl = np.asarray(csr.vals, np.float32)
+    nnz = int(rp[-1])
+    lengths = (rp[1:] - rp[:-1]).astype(np.int64)
+    T = max(-(-nnz // S), 1)
+    pad = T * S - nnz
+
+    rows = np.repeat(np.arange(m, dtype=np.int64), lengths)
+    rows = np.concatenate([rows, np.full(pad, m, np.int64)]).reshape(T, S)
+    cols = np.concatenate([ci.astype(np.int32), np.zeros(pad, np.int32)])
+    vals = np.concatenate([vl, np.zeros(pad, np.float32)])
+
+    # local segment ids: a new segment wherever the row changes inside a chunk
+    newseg = np.ones((T, S), bool)
+    newseg[:, 1:] = rows[:, 1:] != rows[:, :-1]
+    local_seg = (np.cumsum(newseg, axis=1) - 1).astype(np.int32)
+    R = _round_up(max(int(local_seg[:, -1].max()) + 1, 1), 8)
+    seg_row = np.full((T, R), m, np.int32)
+    t_idx = np.broadcast_to(np.arange(T)[:, None], (T, S))
+    seg_row[t_idx, local_seg] = rows
+
+    from repro.sparse.csrk import _pack_values
+
+    dvals, dscale = _pack_values(vals.reshape(T, S), value_dtype)
+    return SegSumCSR(
+        dvals,
+        jnp.asarray(cols.reshape(T, S)),
+        jnp.asarray(local_seg),
+        jnp.asarray(seg_row),
+        (m, n),
+        nnz_real=nnz,
+        val_scale=dscale,
+        value_dtype=value_dtype,
+    )

@@ -28,6 +28,8 @@ class MatrixStats:
     row_var: float      # variance of nnz per row — the regularity signal
     row_max: int        # densest row
     bandwidth: int      # max |i - j| over nnz (post-Band-k if A was reordered)
+    diag_fraction: float = 0.0  # nnz fraction on ≥DIAG_OCCUPANCY-occupied diagonals
+    row_skew: float = 1.0       # row_max / mean row length (power-law signal)
 
     @property
     def is_regular(self) -> bool:
@@ -42,6 +44,26 @@ class MatrixStats:
 #: variance at or below this; above it the matrix counts as irregular.
 REGULAR_ROW_VAR_MAX = 10.0
 
+#: A diagonal counts as *dense* when it fills at least this fraction of the
+#: ``m`` slots a DIA plane row costs — the occupancy threshold both the
+#: stats pass (``diag_fraction``) and the DIA/CSR hybrid's extraction policy
+#: (:func:`repro.sparse.diahybrid.dense_diagonals`) default to.
+DIAG_OCCUPANCY = 0.9
+
+#: Routing floor for the DIA/CSR hybrid: at least this fraction of nnz must
+#: live on dense diagonals (Fukaya et al., arXiv:2105.04937, route partially-
+#: diagonal matrices to DIA + a CSR remainder).
+DIA_FRACTION_MIN = 0.9
+
+#: Routing floor for the speculative segmented-sum path: row_max must exceed
+#: the mean row length by this factor (Liu & Vinter, arXiv:1504.06474 —
+#: power-law matrices where even per-chunk SELL padding explodes).  The
+#: suite's irregular FEM matrices sit at skew ≈ 1.1, moderately-skewed
+#: Pareto matrices (SELL-C-σ's home turf) at skew ≈ 6–10, and hub-dominated
+#: Zipf families at skew ≫ 20, so the boundary sits in the gap between the
+#: last two.
+SEGSUM_ROW_SKEW_MIN = 16.0
+
 
 def compute_stats(A: CSRMatrix) -> MatrixStats:
     """Compute :class:`MatrixStats` in a single pass over the CSR arrays.
@@ -52,24 +74,39 @@ def compute_stats(A: CSRMatrix) -> MatrixStats:
     """
     rp = np.asarray(A.row_ptr)
     ci = np.asarray(A.col_idx)
-    m = A.m
+    m, n = A.m, A.n
     lengths = (rp[1:] - rp[:-1]).astype(np.int64)
     nnz = int(rp[-1])
     mean = nnz / max(m, 1)
     var = float(((lengths - mean) ** 2).mean()) if m else 0.0
     if nnz:
         rows_of_nnz = np.repeat(np.arange(m, dtype=np.int64), lengths)
-        bandwidth = int(np.abs(ci.astype(np.int64) - rows_of_nnz).max())
+        offsets = ci.astype(np.int64) - rows_of_nnz
+        bandwidth = int(np.abs(offsets).max())
+        # Same-pass diagonal census: per-offset nnz counts vs the m plane
+        # slots a DIA row would cost — the fraction of nnz on dense diagonals
+        # is the DIA/CSR hybrid's O(1) routing signal (offsets span
+        # [-(m-1), n-1], so the bincount costs O(nnz + m + n), within the
+        # one-sweep budget).  Measuring against m rather than each diagonal's
+        # own length keeps short corner diagonals out (a 100%-occupied
+        # 3-entry diagonal is not worth an m-slot plane row).
+        counts = np.bincount(offsets + (m - 1), minlength=m + n - 1)
+        dense = counts >= DIAG_OCCUPANCY * max(m, 1)
+        diag_fraction = float(counts[dense].sum() / nnz)
     else:
         bandwidth = 0
+        diag_fraction = 0.0
+    row_max = int(lengths.max(initial=0))
     return MatrixStats(
         m=m,
-        n=A.n,
+        n=n,
         nnz=nnz,
         rdensity=float(mean),
         row_var=var,
-        row_max=int(lengths.max(initial=0)),
+        row_max=row_max,
         bandwidth=bandwidth,
+        diag_fraction=diag_fraction,
+        row_skew=float(row_max / max(mean, 1e-30)) if nnz else 1.0,
     )
 
 
